@@ -1,0 +1,63 @@
+"""Fig. 6 reproduction: throughput of first-touch / offline / online guided
+tiering under DRAM capacity limits of 10-50% of peak RSS, relative to the
+unconstrained default.  ``derived`` = throughput relative to default."""
+
+from __future__ import annotations
+
+from repro.core import CLX
+from repro.mem import MemorySimulator
+from repro.mem.workloads import CORAL, SPEC
+
+from .common import emit, timed
+
+CAPS = (0.10, 0.20, 0.30, 0.40, 0.50)
+
+
+def run(quick: bool = False):
+    rows = []
+    coral = list(CORAL.items())
+    spec = list(SPEC.items())
+    caps = CAPS if not quick else (0.20, 0.50)
+    for name, wlf in coral:
+        wl = wlf("medium")
+        sim = MemorySimulator(CLX, wl)
+        default = sim.run_all_fast()
+        for cap_frac in caps:
+            cap = int(wl.peak_rss * cap_frac)
+            for policy, runner in (
+                ("first_touch", lambda: sim.run_first_touch(cap)),
+                ("offline", lambda: sim.run_offline(cap)),
+                ("online", lambda: sim.run_online(cap)),
+            ):
+                res, us = timed(runner)
+                rows.append(
+                    (
+                        f"fig6/{wl.name}/{int(cap_frac*100)}pct/{policy}",
+                        us,
+                        res.throughput / default.throughput,
+                    )
+                )
+    for name, wlf in spec:
+        wl = wlf()
+        sim = MemorySimulator(CLX, wl)
+        default = sim.run_all_fast()
+        for cap_frac in (caps if not quick else (0.20,)):
+            cap = int(wl.peak_rss * cap_frac)
+            for policy, runner in (
+                ("first_touch", lambda: sim.run_first_touch(cap)),
+                ("offline", lambda: sim.run_offline(cap)),
+                ("online", lambda: sim.run_online(cap)),
+            ):
+                res, us = timed(runner)
+                rows.append(
+                    (
+                        f"fig6/{wl.name}/{int(cap_frac*100)}pct/{policy}",
+                        us,
+                        res.throughput / default.throughput,
+                    )
+                )
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

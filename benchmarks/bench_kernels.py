@@ -1,0 +1,82 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle wall time on
+CPU — correctness-weighted timing only (TPU wall-time is the target, not
+measurable here); ``derived`` = max abs error vs the oracle."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+from .common import emit
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = False):
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    # flash attention
+    B, S, H, K, dh = 2, 256, 8, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, dh), jnp.float32)
+    want, us_ref = _time(lambda a, b, c: ref.mha_reference(a, b, c), q, k, v)
+    got, us_pal = _time(
+        lambda a, b, c: flash_attention_pallas(a, b, c, True, None, True),
+        q, k, v)
+    err = float(jnp.abs(got - want).max())
+    rows.append(("kernels/flash_attention/oracle", us_ref, 0.0))
+    rows.append(("kernels/flash_attention/pallas_interpret", us_pal, err))
+
+    # paged attention
+    rng = np.random.default_rng(0)
+    B, H, K, dh, N, P, MP = 4, 8, 4, 64, 32, 16, 8
+    q1 = jnp.asarray(rng.normal(size=(B, H, dh)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(N, P, K, dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(N, P, K, dh)), jnp.float32)
+    table = jnp.asarray(
+        rng.permutation(N)[: B * MP].reshape(B, MP), jnp.int32)
+    lengths = jnp.asarray(rng.integers(P, MP * P, B), jnp.int32)
+    want, us_ref = _time(ref.paged_attention_reference, q1, kp, vp, table,
+                         lengths)
+    got, us_pal = _time(
+        lambda *a: paged_attention_pallas(*a, interpret=True),
+        q1, kp, vp, table, lengths)
+    err = float(jnp.abs(got - want).max())
+    rows.append(("kernels/paged_attention/oracle", us_ref, 0.0))
+    rows.append(("kernels/paged_attention/pallas_interpret", us_pal, err))
+
+    # ssd scan
+    B, Q, H, P_, N_ = 2, 128, 8, 64, 64
+    x = jnp.asarray(rng.normal(size=(B, Q, H, P_)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, Q, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, Q, N_)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, Q, N_)), jnp.float32)
+    want, us_ref = _time(ref.ssd_reference, x, dt, A, Bm, Cm)
+    got, us_pal = _time(lambda *a: ssd_scan_pallas(*a, interpret=True),
+                        x, dt, A, Bm, Cm)
+    err = float(jnp.abs(got - want).max())
+    rows.append(("kernels/ssd_scan/oracle", us_ref, 0.0))
+    rows.append(("kernels/ssd_scan/pallas_interpret", us_pal, err))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Fig. 8 reproduction: CORAL large/huge inputs against the full 192 GB DRAM
+tier — guided software tiering vs hardware-managed caching (memory mode),
+plus the beyond-paper fragmentation fix.  ``derived`` = throughput relative
+to unguided first touch (the Fig. 8 y-axis)."""
+
+from __future__ import annotations
+
+from repro.core import CLX
+from repro.mem import MemorySimulator
+from repro.mem.workloads import amg, lulesh, qmcpack, snap
+
+from .common import emit, timed
+
+DRAM = CLX.fast.capacity_bytes
+
+
+def run(quick: bool = False):
+    rows = []
+    cases = [(lulesh, "large"), (amg, "large"), (snap, "large"), (qmcpack, "large")]
+    if not quick:
+        cases += [(lulesh, "huge"), (amg, "huge"), (snap, "huge"), (qmcpack, "huge")]
+    for wlf, size in cases:
+        wl = wlf(size)
+        sim = MemorySimulator(CLX, wl)
+        ft = sim.run_first_touch(DRAM)
+        for policy, runner in (
+            ("offline", lambda: sim.run_offline(DRAM)),
+            ("online", lambda: sim.run_online(DRAM)),
+            ("hw_cache", lambda: sim.run_hw_cache(DRAM)),
+            ("online_frag", lambda: sim.run_online(DRAM, fragmentation=True)),
+        ):
+            res, us = timed(runner)
+            rows.append((f"fig8/{wl.name}/{policy}", us, res.speedup_over(ft)))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Fig. 7 reproduction: per-interval total memory bandwidth and GBs migrated
+over time for the CORAL benchmarks (medium input, 50% DRAM cap, online
+policy).  ``derived`` for the summary rows = fraction of all migrated bytes
+that moved in the first quarter of the run (the Fig. 7 'startup' shape);
+per-phase rows report bandwidth in GB/s."""
+
+from __future__ import annotations
+
+from repro.core import CLX
+from repro.mem import GB, MemorySimulator
+from repro.mem.workloads import CORAL
+
+from .common import emit
+
+
+def run(quick: bool = False, trace: bool = False):
+    rows = []
+    for name, wlf in CORAL.items():
+        wl = wlf("medium")
+        sim = MemorySimulator(CLX, wl)
+        res = sim.run_online(int(wl.peak_rss * 0.5))
+        total_mig = sum(p.bytes_migrated for p in res.phase_records) or 1
+        n = len(res.phase_records)
+        first_q = sum(p.bytes_migrated for p in res.phase_records[: n // 4])
+        rows.append(
+            (
+                f"fig7/{wl.name}/early_migration_frac",
+                res.total_seconds * 1e6,
+                first_q / total_mig,
+            )
+        )
+        rows.append(
+            (
+                f"fig7/{wl.name}/total_migrated_GB",
+                res.total_seconds * 1e6,
+                res.bytes_migrated / GB,
+            )
+        )
+        if trace:
+            for p in res.phase_records:
+                rows.append(
+                    (
+                        f"fig7/{wl.name}/phase{p.phase:03d}/bw",
+                        p.wall_seconds * 1e6,
+                        p.bandwidth_GBps,
+                    )
+                )
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run(trace=True)

@@ -1,0 +1,77 @@
+"""Serving-engine benchmark: guided KV-page tiering (the paper's technique
+applied to serving) vs LRU/FIFO eviction on a multi-session workload with an
+HBM page budget.  ``derived`` = page-swap bytes moved (lower is better) for
+swap rows, and modeled step time (PCIe swaps + decode) for time rows."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.core import TPU_V5E
+from repro.models import build_model
+from repro.serve import Engine, ServeConfig
+
+from .common import emit
+
+
+def session_workload(policy: str, rounds: int = 10):
+    """Hot multi-turn sessions + periodic one-shot 'scan' sessions (long
+    prompt, generated once, never resumed) — the access pattern where
+    frequency-aware guidance must resist cache pollution."""
+    cfg = dataclasses.replace(get_smoke("llama3_2_1b"), remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, ServeConfig(
+        max_batch=2, page_size=4, hbm_pages=12, host_pages=160,
+        policy=policy, interval_steps=4))
+    rng = np.random.default_rng(0)
+    prompt = [2, 7, 1, 8, 2, 8]
+    for rid in range(4):
+        eng.add_request(rid, prompt, max_new=64)
+        eng.pause(rid)
+    hot = [0, 1]
+    scan_id = 1000
+    t0 = time.perf_counter()
+    for r in range(rounds):
+        for rid in hot:
+            eng.resume(rid)
+        if r % 5 == 4:
+            eng.resume(2 + (r // 5) % 2)
+        for _ in range(2):
+            eng.step()
+        if r % 2 == 1:
+            # scan: long one-shot request, decoded briefly, then abandoned
+            long_prompt = [int(t) for t in rng.integers(1, cfg.vocab, 16)]
+            eng.add_request(scan_id, long_prompt, max_new=2)
+            eng.step()
+            eng.step()
+            scan_id += 1
+        for rid in list(eng.requests):
+            if eng.requests[rid].state == "active":
+                eng.pause(rid)
+    wall = time.perf_counter() - t0
+    return eng.stats(), wall
+
+
+def run(quick: bool = False):
+    rows = []
+    pcie = TPU_V5E.slow.read_bw_GBps * 1e9
+    for policy in ("gdt", "lru", "fifo"):
+        stats, wall = session_workload(policy, rounds=6 if quick else 10)
+        swap_s = stats["bytes_moved"] / pcie
+        rows.append((f"serve/{policy}/swap_bytes", wall * 1e6,
+                     stats["bytes_moved"]))
+        rows.append((f"serve/{policy}/swap_ins", wall * 1e6,
+                     stats["swap_ins"]))
+        rows.append((f"serve/{policy}/modeled_swap_seconds", wall * 1e6,
+                     swap_s))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Training benchmark: guided optimizer-state offload under an HBM budget.
+
+Runs the same smoke training twice — unconstrained vs a 60% HBM budget with
+OnlineGDT offload — and reports: loss parity (migration never changes
+numerics), bytes migrated, and per-step transfer (rental) traffic.
+``derived`` = final loss for loss rows; bytes for traffic rows."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.core import GDTConfig
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.optim import AdamW
+from repro.train import Trainer, TrainerConfig
+
+from .common import emit
+
+
+def run(quick: bool = False):
+    steps = 10 if quick else 25
+    cfg = dataclasses.replace(get_smoke("llama3_2_1b"), remat=False)
+    model = build_model(cfg)
+    opt = AdamW(lr=3e-3, weight_decay=0.0)
+    src = SyntheticLM(cfg.vocab, 64, 4, seed=3)
+    data = [{k: jnp.asarray(v) for k, v in src.batch_np(i).items()}
+            for i in range(steps + 1)]
+
+    rows = []
+    t0 = time.perf_counter()
+    tr = Trainer(model, opt, TrainerConfig(steps=steps, log_every=1),
+                 rng=jax.random.PRNGKey(5))
+    tr.run(iter(data))
+    base_wall = time.perf_counter() - t0
+    base_loss = tr.metrics_log[-1]["loss"]
+    rows.append(("train/baseline/final_loss", base_wall * 1e6, base_loss))
+
+    state_bytes = sum(a.size * a.dtype.itemsize
+                      for a in jax.tree.leaves(tr.params))
+    state_bytes += 2 * sum(a.size * a.dtype.itemsize
+                           for a in jax.tree.leaves(tr.opt_state.m))
+    gdt = GDTConfig(enabled=True, strategy="thermos",
+                    fast_capacity_bytes=int(state_bytes * 0.6),
+                    interval_steps=5, promotion_threshold=1024)
+    t0 = time.perf_counter()
+    tr2 = Trainer(model, opt, TrainerConfig(steps=steps, log_every=1,
+                                            gdt=gdt),
+                  rng=jax.random.PRNGKey(5))
+    tr2.run(iter(data))
+    gdt_wall = time.perf_counter() - t0
+    gdt_loss = tr2.metrics_log[-1]["loss"]
+    rows.append(("train/gdt_offload/final_loss", gdt_wall * 1e6, gdt_loss))
+    rows.append(("train/gdt_offload/loss_delta", gdt_wall * 1e6,
+                 abs(gdt_loss - base_loss)))
+    rows.append(("train/gdt_offload/bytes_migrated", gdt_wall * 1e6,
+                 tr2.gdt.total_bytes_migrated))
+    rows.append(("train/gdt_offload/rental_transfer_bytes", gdt_wall * 1e6,
+                 tr2.placer.transfers_bytes))
+    rows.append(("train/gdt_offload/slow_tier_bytes", gdt_wall * 1e6,
+                 tr2.placer.slow_bytes()))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Shared benchmark plumbing: every bench module exposes ``run() -> rows``
+where each row is ``(name, us_per_call, derived)``; ``derived`` is the
+figure-of-merit the corresponding paper table/figure reports (usually a
+speedup ratio).  ``benchmarks.run`` aggregates all modules into one CSV."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, List, Tuple
+
+Row = Tuple[str, float, float]
+
+
+def timed(fn: Callable, *args, **kwargs):
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(rows: Iterable[Row]) -> List[Row]:
+    rows = list(rows)
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived:.4f}")
+    return rows

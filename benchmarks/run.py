@@ -1,0 +1,63 @@
+"""Benchmark registry — one function per paper table/figure (plus framework
+benches added alongside their subsystems).  Prints ``name,us_per_call,derived``
+CSV rows.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run             # everything
+    PYTHONPATH=src python -m benchmarks.run --quick     # reduced sweep
+    PYTHONPATH=src python -m benchmarks.run --only fig6 # one group
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+BENCHES = {
+    "fig6": "benchmarks.bench_capacity_sweep",
+    "fig7": "benchmarks.bench_migration_trace",
+    "fig8": "benchmarks.bench_large_mem",
+    "table2": "benchmarks.bench_profile_overhead",
+    "kernels": "benchmarks.bench_kernels",
+    "serve": "benchmarks.bench_serving",
+    "train": "benchmarks.bench_train",
+    "roofline": "benchmarks.roofline",
+}
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser()
+    parser.add_argument("--only", type=str, default=None,
+                        help="comma-separated bench group names")
+    parser.add_argument("--quick", action="store_true",
+                        help="reduced sweeps for CI")
+    args = parser.parse_args()
+
+    names = list(BENCHES) if args.only is None else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        modname = BENCHES.get(name)
+        if modname is None:
+            print(f"unknown bench group: {name}", file=sys.stderr)
+            failures.append(name)
+            continue
+        try:
+            mod = importlib.import_module(modname)
+        except ModuleNotFoundError:
+            # Subsystem not built yet / optional.
+            print(f"# skip {name}: module {modname} not present", file=sys.stderr)
+            continue
+        try:
+            mod.run(quick=args.quick)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        sys.exit(f"benchmark groups failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Policy playground: the paper's decision machinery on a synthetic
+workload, no JAX involved — watch knapsack / hotset / thermos disagree and
+the ski-rental break-even rule decide when migration pays.
+
+    PYTHONPATH=src python examples/policy_playground.py
+"""
+
+from repro.core import (
+    ArenaManager,
+    CLX,
+    GDTConfig,
+    OnlineGDT,
+    SiteKind,
+    SiteRegistry,
+    recommend,
+)
+
+MB = 2**20
+
+
+def main():
+    reg = SiteRegistry()
+    mgr = ArenaManager(reg, promotion_threshold=1 * MB,
+                       fast_capacity_bytes=100 * MB)
+    # A workload: hot small site, warm big site, cold big site; the big
+    # ones arrive first (first-touch grabs the fast tier).
+    cold = reg.register(["big_cold_array"], SiteKind.OTHER)
+    warm = reg.register(["big_warm_array"], SiteKind.OTHER)
+    hot = reg.register(["hot_workset"], SiteKind.OTHER)
+    mgr.allocate(cold, 60 * MB)
+    mgr.allocate(warm, 50 * MB)
+    a_hot = mgr.allocate(hot, 30 * MB)
+    print("first-touch placement (fast fraction):")
+    for a in mgr:
+        print(f"  {a.site.label:16s} {a.resident_bytes/MB:5.0f} MiB  "
+              f"fast={a.fast_fraction:.2f}")
+
+    gdt = OnlineGDT(mgr, CLX, GDTConfig(strategy="thermos",
+                                        fast_capacity_bytes=100 * MB,
+                                        interval_steps=1))
+    print("\nintervals (10k accesses/interval to hot, 3k to warm, 10 cold):")
+    for i in range(8):
+        mgr.touch(hot, 200_000)
+        mgr.touch(warm, 60_000)
+        mgr.touch(cold, 10)
+        rec = gdt.on_step()
+        d = rec.decision
+        print(f"  t={i}: rental {d.rental_cost_ns/1e6:8.2f} ms vs purchase "
+              f"{d.purchase_cost_ns/1e6:8.2f} ms -> "
+              f"{'MIGRATE' if rec.migrated else 'wait'}"
+              + (f" ({rec.bytes_moved/MB:.0f} MiB)" if rec.migrated else ""))
+    print("\nfinal placement:")
+    for a in mgr:
+        print(f"  {a.site.label:16s} fast={a.fast_fraction:.2f}")
+
+    # Compare the three MemBrain engines on the same profile.
+    prof = gdt.profiler.snapshot()
+    print("\nrecommendation engines at 100 MiB capacity:")
+    for strat in ("knapsack", "hotset", "thermos"):
+        recs = recommend(prof, 100 * MB, strat)
+        desc = ", ".join(
+            f"{r.label}={recs.fractions.get(r.arena_id, 0.0):.2f}"
+            for r in prof.rows)
+        print(f"  {strat:8s}: {desc}")
+
+
+if __name__ == "__main__":
+    main()

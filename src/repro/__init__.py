@@ -1,0 +1,4 @@
+"""repro — online application guidance for heterogeneous memory systems,
+as a production-grade JAX training/serving framework (see DESIGN.md)."""
+
+__version__ = "1.0.0"

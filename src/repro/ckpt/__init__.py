@@ -1,0 +1,3 @@
+from .checkpoint import AsyncCheckpointer, available_steps, restore, save
+
+__all__ = ["AsyncCheckpointer", "available_steps", "restore", "save"]

@@ -1,0 +1,3 @@
+from .base import ARCHS, LONG_CONTEXT_OK, get, get_smoke, shapes_for
+
+__all__ = ["ARCHS", "LONG_CONTEXT_OK", "get", "get_smoke", "shapes_for"]

@@ -1,0 +1,54 @@
+"""repro.core — the paper's contribution: online application guidance for
+heterogeneous memory, adapted to JAX/TPU (see DESIGN.md)."""
+
+from .arenas import Arena, ArenaManager, DEFAULT_PROMOTION_THRESHOLD
+from .fragmentation import (
+    ChunkStats,
+    Fragment,
+    collapse_to_chunks,
+    explode_profile,
+    fragment_by_age,
+    parent_fractions,
+)
+from .hwmodel import CLX, TPU_V5E, HardwareModel, TierSpec
+from .profiler import ArenaProfile, IntervalProfile, OnlineProfiler
+from .recommend import TierAssignment, hotset, knapsack, recommend, thermos
+from .sites import Site, SiteKind, SiteRegistry
+from .skirental import MigrationDecision, decide, get_purchase_cost, get_rental_cost
+from .tiering import FractionPlacer, GDTConfig, IntervalRecord, MoveStats, OnlineGDT
+
+__all__ = [
+    "Arena",
+    "ArenaManager",
+    "ArenaProfile",
+    "CLX",
+    "ChunkStats",
+    "DEFAULT_PROMOTION_THRESHOLD",
+    "FractionPlacer",
+    "Fragment",
+    "GDTConfig",
+    "HardwareModel",
+    "IntervalProfile",
+    "IntervalRecord",
+    "MigrationDecision",
+    "MoveStats",
+    "OnlineGDT",
+    "OnlineProfiler",
+    "Site",
+    "SiteKind",
+    "SiteRegistry",
+    "TPU_V5E",
+    "TierAssignment",
+    "TierSpec",
+    "collapse_to_chunks",
+    "decide",
+    "explode_profile",
+    "fragment_by_age",
+    "get_purchase_cost",
+    "get_rental_cost",
+    "hotset",
+    "knapsack",
+    "parent_fractions",
+    "recommend",
+    "thermos",
+]

@@ -1,0 +1,138 @@
+"""Hardware models for heterogeneous memory tiers.
+
+The paper's ski-rental constants (EXTRA_NS_PER_SLOWER_ACCESS, NS_PER_PAGE_MOVED)
+are properties of the platform.  We keep two calibrations:
+
+* ``CLX``      — the paper's evaluation box (Cascade Lake, DDR4 + Optane DC).
+                 Constants straight from the paper (Secs. 4.2, 5.1).
+* ``TPU_V5E``  — the TPU target this framework adapts the technique to:
+                 fast tier = on-chip HBM, slow tier = host DRAM over PCIe.
+
+All byte-rate constants are in GB/s (1e9 bytes/s); latencies in ns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One memory tier as seen by a single processor/chip."""
+
+    name: str
+    memory_kind: str          # jax memory kind used for enforcement
+    capacity_bytes: int
+    read_bw_GBps: float       # sustained read bandwidth
+    write_bw_GBps: float      # sustained write bandwidth
+    read_latency_ns: float    # average loaded read latency
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Two-tier memory platform + the Algorithm-1 cost constants.
+
+    ``extra_ns_per_slow_access`` is the paper's EXTRA_NS_PER_SLOWER_ACCESS: the
+    average *additional* latency paid when an access that could have been served
+    by the fast tier is served by the slow tier.
+
+    ``ns_per_page_moved`` is NS_PER_PAGE_MOVED: the cost of remapping one
+    ``page_bytes`` page between tiers.
+    """
+
+    name: str
+    fast: TierSpec
+    slow: TierSpec
+    extra_ns_per_slow_access: float
+    ns_per_page_moved: float
+    page_bytes: int = 4096
+    # Typical bytes touched per sampled "access"; the paper samples LLC-miss
+    # loads (64 B lines).  The TPU model counts whole-arena touches, so its
+    # access unit is 1 byte and access counts carry the byte volume.
+    bytes_per_access: int = 64
+
+    def pages(self, nbytes: int) -> int:
+        return -(-int(nbytes) // self.page_bytes)
+
+    def move_cost_ns(self, nbytes: int) -> float:
+        return self.pages(nbytes) * self.ns_per_page_moved
+
+    @property
+    def slowdown_ratio(self) -> float:
+        """Read-bandwidth ratio fast/slow (used by the simulator)."""
+        return self.fast.read_bw_GBps / self.slow.read_bw_GBps
+
+
+# ---------------------------------------------------------------------------
+# The paper's platform: Intel Cascade Lake, 192 GB DDR4 + 768 GB Optane DC.
+# DDR4: 6x32 GB 2933 MT/s  => ~100 GB/s sustained (paper Fig. 7 y-axis max).
+# Optane: 30-40% of DDR4 read bw, +300 ns average extra read latency (Sec. 4.2),
+# write bw 5-10x lower than DDR4 (Sec. 5.1).  move_pages ~= 2 us / 4 KB page.
+# ---------------------------------------------------------------------------
+CLX = HardwareModel(
+    name="clx-ddr4-optane",
+    fast=TierSpec(
+        name="DRAM",
+        memory_kind="device",
+        capacity_bytes=192 * 2**30,
+        read_bw_GBps=100.0,
+        write_bw_GBps=80.0,
+        read_latency_ns=90.0,
+    ),
+    slow=TierSpec(
+        name="OPTANE",
+        memory_kind="pinned_host",
+        capacity_bytes=768 * 2**30,
+        read_bw_GBps=35.0,          # 30-40% of DDR4
+        write_bw_GBps=10.0,         # 5-10x lower than DDR4
+        read_latency_ns=390.0,      # +300 ns over DDR4
+    ),
+    extra_ns_per_slow_access=300.0,  # Sec. 4.2
+    ns_per_page_moved=2000.0,        # Sec. 4.2: ~2 us per 4 KB page
+)
+
+
+# ---------------------------------------------------------------------------
+# The TPU adaptation target: one v5e chip.
+#   fast tier  = HBM  (16 GB, 819 GB/s)
+#   slow tier  = host DRAM reached over PCIe gen4 x8-ish (~16 GB/s effective
+#                per chip on a 4-chip host; latency in the microseconds).
+# The "access" unit for tier decisions is one byte of arena traffic, so
+# extra_ns_per_slow_access is the per-byte bandwidth tax:
+#   1/16 GB/s - 1/819 GB/s  =  0.0613 - 0.0012 ns/B  ~= 0.060 ns per byte.
+# Page = 2 MiB arena block; moving it over PCIe at ~16 GB/s ~= 131 us, plus
+# fixed descriptor overhead.
+# ---------------------------------------------------------------------------
+_TPU_PCIE_GBPS = 16.0
+_TPU_HBM_GBPS = 819.0
+_TPU_PAGE = 2 * 2**20
+
+TPU_V5E = HardwareModel(
+    name="tpu-v5e-hbm-host",
+    fast=TierSpec(
+        name="HBM",
+        memory_kind="device",
+        capacity_bytes=16 * 2**30,
+        read_bw_GBps=_TPU_HBM_GBPS,
+        write_bw_GBps=_TPU_HBM_GBPS,
+        read_latency_ns=500.0,
+    ),
+    slow=TierSpec(
+        name="HOST",
+        memory_kind="pinned_host",
+        capacity_bytes=512 * 2**30,
+        read_bw_GBps=_TPU_PCIE_GBPS,
+        write_bw_GBps=_TPU_PCIE_GBPS,
+        read_latency_ns=2500.0,
+    ),
+    extra_ns_per_slow_access=(1.0 / _TPU_PCIE_GBPS - 1.0 / _TPU_HBM_GBPS),
+    ns_per_page_moved=_TPU_PAGE / _TPU_PCIE_GBPS + 5000.0,
+    page_bytes=_TPU_PAGE,
+    bytes_per_access=1,
+)
+
+
+# Roofline constants for the target chip (used by benchmarks/roofline.py).
+TPU_V5E_PEAK_BF16_FLOPS = 197e12     # per chip
+TPU_V5E_HBM_GBPS = 819.0             # per chip
+TPU_V5E_ICI_GBPS_PER_LINK = 50.0     # per link

@@ -1,0 +1,3 @@
+from .pipeline import ShardedLoader, SyntheticLM
+
+__all__ = ["ShardedLoader", "SyntheticLM"]

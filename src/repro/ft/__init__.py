@@ -1,0 +1,5 @@
+from .elastic import RescalePlan, plan_rescale, reshard_state
+from .heartbeat import HeartbeatMonitor, NodeStats
+
+__all__ = ["HeartbeatMonitor", "NodeStats", "RescalePlan", "plan_rescale",
+           "reshard_state"]

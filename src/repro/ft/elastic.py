@@ -1,0 +1,64 @@
+"""Elastic rescale planning: choose a new mesh for the surviving devices and
+re-shard the training state onto it.
+
+Policy: keep the model axis intact whenever possible (TP degree is baked
+into layout efficiency) and shrink the data axis; if fewer than one model
+group survives, shrink the model axis to the largest power-of-two divisor
+of the device count that divides the head/ffn dims.  Global batch is
+preserved by raising gradient accumulation (synchronous semantics keep the
+loss curve comparable across rescales).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from ..models.common import param_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    accum_factor: int           # multiply grad-accumulation by this
+
+    @property
+    def new_device_count(self) -> int:
+        n = 1
+        for s in self.new_shape:
+            n *= s
+        return n
+
+
+def plan_rescale(n_alive: int, old_shape: Tuple[int, ...],
+                 axis_names: Tuple[str, ...] = ("data", "model")) -> RescalePlan:
+    """Shrink the data axis first; keep model axis if any full group fits."""
+    *lead, data, model = old_shape
+    lead_n = 1
+    for s in lead:
+        lead_n *= s
+    groups = n_alive // (model * lead_n)
+    if groups >= 1:
+        new_shape = tuple(lead) + (groups, model)
+        accum = -(-data // groups)
+    else:
+        # Not even one model group: shrink model to largest p2 divisor.
+        m = 1
+        while m * 2 <= n_alive:
+            m *= 2
+        new_shape = tuple(1 for _ in lead) + (1, m)
+        accum = data
+    return RescalePlan(old_shape=old_shape, new_shape=new_shape,
+                       axis_names=axis_names, accum_factor=max(1, accum // max(new_shape[-2], 1)) if groups >= 1 else accum)
+
+
+def reshard_state(tree, defs, new_mesh: Mesh, rules=None):
+    """Re-place a (host or device) pytree onto the new mesh according to the
+    same logical-axis declarations used at init."""
+    shardings = param_shardings(defs, new_mesh, rules)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)

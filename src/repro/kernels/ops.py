@@ -1,0 +1,70 @@
+"""jit'd kernel wrappers with backend dispatch.
+
+Modes:
+  * "pallas"    — pl.pallas_call TPU kernels (kernels/<name>.py),
+  * "interpret" — same kernels, Pallas interpret mode (CPU validation),
+  * "reference" — pure-jnp oracles (kernels/ref.py).
+
+Default: pallas on TPU, reference elsewhere — so dry-run cost analysis on
+the CPU backend reflects honest XLA HLO, while TPU runs get the tiled
+kernels.  Override per-call or globally via ``set_mode``.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import ref
+
+_MODE: Optional[str] = None  # None = auto
+
+
+def set_mode(mode: Optional[str]):
+    global _MODE
+    assert mode in (None, "pallas", "interpret", "reference")
+    _MODE = mode
+
+
+def current_mode() -> str:
+    if _MODE is not None:
+        return _MODE
+    platform = jax.default_backend()
+    return "pallas" if platform == "tpu" else "reference"
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None):
+    mode = current_mode()
+    if mode == "reference":
+        return ref.mha_reference(q, k, v, causal=causal, window=window)
+    from .flash_attention import flash_attention_pallas
+
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=(mode == "interpret"))
+
+
+def paged_attention(q, k_pool, v_pool, page_table, lengths,
+                    window: Optional[int] = None):
+    mode = current_mode()
+    if mode == "reference":
+        return ref.paged_attention_reference(q, k_pool, v_pool, page_table,
+                                             lengths, window=window)
+    from .paged_attention import paged_attention_pallas
+
+    return paged_attention_pallas(q, k_pool, v_pool, page_table, lengths,
+                                  window=window,
+                                  interpret=(mode == "interpret"))
+
+
+def ssd_scan(x, dt, A, Bm, Cm):
+    """Intra-chunk SSD block (one chunk).  Cross-chunk recurrence stays in
+    models/ssm.py regardless of backend."""
+    mode = current_mode()
+    if mode == "reference":
+        return ref.ssd_reference(x, dt, A, Bm, Cm)
+    from .ssd_scan import ssd_scan_pallas
+
+    return ssd_scan_pallas(x, dt, A, Bm, Cm,
+                           interpret=(mode == "interpret"))

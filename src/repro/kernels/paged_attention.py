@@ -1,0 +1,142 @@
+"""Paged attention decode — Pallas TPU kernel.
+
+The serving hot spot for guided KV tiering: one new query token per sequence
+attends over KV pages scattered through the HBM pool according to a page
+table.  Grid = (B, MP): the page dimension is innermost, so the per-sequence
+online-softmax state (m, l, acc) lives in VMEM scratch and the output is
+finalized on the last page.
+
+The page table drives *block-index gathering*: each grid step's k/v
+BlockSpec index map reads the physical pool slot for (sequence b, logical
+page p) from a scalar-prefetch operand — pages never move, the kernel's
+tiles jump through the pool.  Invalid / out-of-range pages contribute
+nothing (masked by length).
+
+TPU notes: pool pages are (P, K*dh) VMEM tiles (P aligned to 8 sublanes,
+K*dh padded to 128 lanes by the wrapper); the query block is (H, dh).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *,
+            page_size: int, kv_heads: int, q_heads: int, dh: int,
+            window: Optional[int]):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+    np_ = pl.num_programs(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    G = q_heads // kv_heads
+    length = len_ref[b]
+    slot = table_ref[b, p]
+    valid_page = (slot >= 0) & (p * page_size < length)
+
+    @pl.when(valid_page)
+    def _attend():
+        q = q_ref[0][:, :dh].astype(F32)               # (H, dh), un-padded
+        k = k_ref[0].astype(F32)                       # (P, K*dh) padded
+        v = v_ref[0].astype(F32)
+        k = k[:, : kv_heads * dh].reshape(page_size, kv_heads, dh)
+        v = v[:, : kv_heads * dh].reshape(page_size, kv_heads, dh)
+        qg = q.reshape(kv_heads, G, dh)
+        s = jnp.einsum("kgd,pkd->kgp", qg, k,
+                       preferred_element_type=F32)     # (K,G,P)
+        s = s * (1.0 / np.sqrt(dh))
+        pos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (kv_heads, G, page_size), 2)
+        ok = pos < length
+        if window is not None:
+            ok &= (length - 1 - pos) < window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # (K, G)
+        m_cur = jnp.max(s, axis=2)
+        m_new = jnp.maximum(m_prev, m_cur)
+        pexp = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(pexp, axis=2)
+        acc_scr[...] = (acc_scr[...] * alpha[..., None]
+                        + jnp.einsum("kgp,pkd->kgd", pexp, v,
+                                     preferred_element_type=F32))
+        m_scr[...] = m_new
+
+    @pl.when(p == np_ - 1)
+    def _finalize():
+        l = l_scr[...]
+        safe = jnp.where(l > 0, l, 1.0)
+        out = (acc_scr[...] / safe[..., None]).reshape(q_heads, dh)
+        pad = o_ref.shape[-1] - dh
+        if pad:
+            out = jnp.pad(out, ((0, 0), (0, pad)))
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "interpret"))
+def paged_attention_pallas(q, k_pool, v_pool, page_table, lengths,
+                           window: Optional[int] = None,
+                           interpret: bool = False):
+    """q: (B,H,dh); k_pool/v_pool: (N,P,K,dh); page_table: (B,MP) int32
+    (-1 = unused); lengths: (B,).  Returns (B,H,dh)."""
+    B, H, dh = q.shape
+    N, P, K, _ = k_pool.shape
+    MP = page_table.shape[1]
+
+    # Pools flattened to (N, P, K*dh) lanes-padded tiles.
+    kd = K * dh
+    kd_p = ((kd + 127) // 128) * 128
+    kp = jnp.pad(k_pool.reshape(N, P, kd), ((0, 0), (0, 0), (0, kd_p - kd)))
+    vp = jnp.pad(v_pool.reshape(N, P, kd), ((0, 0), (0, 0), (0, kd_p - kd)))
+    dh_p = ((dh + 127) // 128) * 128
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, dh_p - dh)))
+
+    grid = (B, MP)
+
+    def k_index(table, b, p):
+        return (jnp.maximum(table[b, p], 0), 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, page_size=P, kv_heads=K, q_heads=H, dh=dh,
+            window=window),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,      # page_table, lengths
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, dh_p), lambda b, p, table, lens: (b, 0, 0)),
+                pl.BlockSpec((1, P, kd_p),
+                             lambda b, p, table, lens: k_index(table, b, p)),
+                pl.BlockSpec((1, P, kd_p),
+                             lambda b, p, table, lens: k_index(table, b, p)),
+            ],
+            out_specs=pl.BlockSpec((1, H, dh_p),
+                                   lambda b, p, table, lens: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((K, H // K), F32),
+                pltpu.VMEM((K, H // K), F32),
+                pltpu.VMEM((K, H // K, dh), F32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, dh_p), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, qp, kp, vp)
+    return out[:, :, :dh]

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references the
+per-kernel test sweeps assert against, and the lowering used on non-TPU
+backends / in the dry-run, where cost analysis must reflect real XLA HLO)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------- flash attention
+def mha_reference(q, k, v, causal: bool = True,
+                  window: Optional[int] = None,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Exact softmax attention.  q: (B,Sq,H,dh); k/v: (B,Sk,K,dh), GQA."""
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / np.sqrt(dh)
+    qg = q.reshape(B, Sq, K, G, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(F32),
+                   k.astype(F32)) * scale
+    q_pos = jnp.arange(Sq)[:, None] + (k.shape[1] - Sq)
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    if causal:
+        mask = k_pos <= q_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(F32))
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+# ------------------------------------------------------- paged attention
+def paged_attention_reference(q, k_pool, v_pool, page_table, lengths,
+                              window: Optional[int] = None) -> jax.Array:
+    """Decode-time attention over paged KV.
+
+    q: (B, H, dh) — one new token per sequence.
+    k_pool/v_pool: (N_pages, P, K, dh) — one layer's HBM page pool.
+    page_table: (B, MP) int32 — pool slot per logical page, -1 = unused.
+    lengths: (B,) int32 — tokens so far (including the new one).
+    """
+    B, H, dh = q.shape
+    N, P, K, _ = k_pool.shape
+    MP = page_table.shape[1]
+    G = H // K
+    scale = 1.0 / np.sqrt(dh)
+
+    safe = jnp.maximum(page_table, 0)
+    k = k_pool[safe]            # (B, MP, P, K, dh)
+    v = v_pool[safe]
+    k = k.reshape(B, MP * P, K, dh)
+    v = v.reshape(B, MP * P, K, dh)
+    pos = jnp.arange(MP * P)[None, :]
+    valid = (pos < lengths[:, None]) & jnp.repeat(
+        page_table >= 0, P, axis=1)
+    if window is not None:
+        valid &= (lengths[:, None] - 1 - pos) < window
+
+    qg = q.reshape(B, K, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(F32),
+                   k.astype(F32)) * scale
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(F32))
+    return o.reshape(B, H, dh).astype(q.dtype)
+
+
+# ------------------------------------------------------------- SSD scan
+def ssd_reference(x, dt, A, Bm, Cm) -> jax.Array:
+    """Naive O(S^2) SSD (Mamba2) reference.
+
+    x: (B,S,H,P); dt: (B,S,H) f32; A: (H,) f32 negative; Bm/Cm: (B,S,N).
+    y[t] = sum_{j<=t} C_t . B_j * exp(sum_{j<i<=t} dt_i A) * dt_j x_j.
+    """
+    Bsz, S, H, P = x.shape
+    a = dt * A                                  # (B,S,H)
+    a_cum = jnp.cumsum(a, axis=1)
+    diff = a_cum[:, :, None, :] - a_cum[:, None, :, :]   # (B,S,S,H)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    diff = jnp.where(causal[None, :, :, None], diff, -1e30)
+    L = jnp.exp(diff)
+    scores = jnp.einsum("bin,bjn->bij", Cm.astype(F32), Bm.astype(F32))
+    xdt = x.astype(F32) * dt[..., None]
+    y = jnp.einsum("bij,bijh,bjhp->bihp", scores, L, xdt)
+    return y

@@ -1,0 +1,92 @@
+"""Mamba2 SSD intra-chunk block — Pallas TPU kernel.
+
+Computes the quadratic-within-chunk part of the state-space duality
+algorithm for one chunk:
+
+    y[i,h,p] = sum_{j<=i} (C_i . B_j) * exp(a_cum[i,h] - a_cum[j,h])
+                          * dt[j,h] * x[j,h,p]
+
+Grid = (B, H/block_h): one (chunk Q x chunk Q) decay-weighted attention
+block per (batch row, head block).  VMEM tiles: x (Q, block_h*P), dt/a_cum
+(Q, block_h), B/C (Q, N).  The (Q, Q) score matrix (shared across heads) is
+recomputed per head block — cheaper than staging it through HBM for the
+model sizes assigned here (Q<=256, N=64).
+
+The inter-chunk recurrence (linear, O(S)) stays in jnp (models/ssm.py); it
+is bandwidth-trivial compared to this block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, *,
+            Q: int, block_h: int, P: int, N: int):
+    x = x_ref[0].astype(F32)          # (Q, block_h*P)
+    dt = dt_ref[0].astype(F32)        # (Q, block_h)
+    a = a_ref[0].astype(F32)          # (Q, block_h)  per-step log decay
+    Bm = b_ref[0].astype(F32)         # (Q, N)
+    Cm = c_ref[0].astype(F32)         # (Q, N)
+
+    a_cum = jnp.cumsum(a, axis=0)     # (Q, block_h)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=F32)
+
+    xh = x.reshape(Q, block_h, P)
+    xdt = xh * dt[..., None]
+
+    row = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    causal = col <= row
+
+    out = jnp.zeros((Q, block_h, P), F32)
+    for h in range(block_h):          # static unroll over the head block
+        diff = a_cum[:, None, h] - a_cum[None, :, h]      # (Q, Q)
+        diff = jnp.where(causal, diff, -1e30)
+        w = scores * jnp.exp(diff)                        # (Q, Q)
+        yh = jax.lax.dot_general(
+            w, xdt[:, h], (((1,), (0,)), ((), ())),
+            preferred_element_type=F32)                   # (Q, P)
+        out = out.at[:, h].set(yh)
+
+    o_ref[0] = out.reshape(Q, block_h * P).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def ssd_scan_pallas(x, dt, A, Bm, Cm, block_h: int = 4,
+                    interpret: bool = False):
+    """One-chunk SSD.  x: (B,Q,H,P); dt: (B,Q,H) f32; A: (H,) f32;
+    Bm/Cm: (B,Q,N).  Returns y (B,Q,H,P) f32 (no initial state)."""
+    B, Q, H, P = x.shape
+    N = Bm.shape[-1]
+    bh = min(block_h, H)
+    assert H % bh == 0
+    a = dt * A                                    # (B,Q,H)
+
+    xt = x.reshape(B, Q, H * P)
+    grid = (B, H // bh)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, Q=Q, block_h=bh, P=P, N=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, bh * P), lambda b, h, bh=bh, P=P: (b, 0, h)),
+            pl.BlockSpec((1, Q, bh), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, Q, bh), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, Q, N), lambda b, h: (b, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, bh * P), lambda b, h: (b, 0, h)),
+        out_shape=jax.ShapeDtypeStruct((B, Q, H * P), F32),
+        interpret=interpret,
+    )(xt, dt, a, Bm, Cm)
+    return out.reshape(B, Q, H, P)

@@ -1,0 +1,309 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry run: AOT-lower and compile every (architecture x input
+shape) cell on the production meshes, prove per-device memory fits, and
+extract the roofline inputs (FLOPs, bytes, collective traffic).
+
+MUST be run as a module entry point (the XLA_FLAGS line above runs before
+any jax import — importing this module from an already-initialized process
+will not get 512 devices).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_2_1b --shape train_4k
+Results land in results/dryrun/<mesh>/<arch>__<shape>.json (incremental).
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCHS, get as get_config, shapes_for
+from ..dist.sharding import (
+    DECODE_RULES,
+    DEFAULT_RULES,
+    FSDP_RULES,
+    MOMENTS_RULES,
+    SP_DECODE_RULES,
+    logical_to_pspec,
+    use_rules,
+)
+from ..models import SHAPES, build_model
+from ..models.common import abstract_params, param_pspecs
+from ..optim.adamw import AdamW, AdamWState
+from ..train.step import StepConfig, make_train_step
+from .analysis import collective_bytes, jaxpr_cost
+from .mesh import make_production_mesh
+
+F32 = jnp.float32
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+# result shapes like f32[16,4096]{1,0} or bf16[2]{0}; tuples contain several.
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?\S+\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\b(.*)$")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8}
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum result bytes of every collective op in the (partitioned) HLO,
+    grouped by op kind; also records op counts and max replica-group size."""
+    out: Dict[str, Dict[str, float]] = {
+        op: {"bytes": 0.0, "count": 0, "max_group": 0} for op in COLLECTIVE_OPS
+    }
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        result_sig, op, rest = m.groups()
+        if op + "-done" in line and "-start" not in line:
+            # -done carries the same shape as -start; count once (on start
+            # for async pairs, on the plain op otherwise).
+            pass
+        if "-done" in line.split("=")[1]:
+            continue
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(result_sig):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        g = _GROUPS_RE.search(rest)
+        group = len(g.group(1).split(",")) if g else 0
+        rec = out[op]
+        rec["bytes"] += nbytes
+        rec["count"] += 1
+        rec["max_group"] = max(rec["max_group"], group)
+    return out
+
+
+def _input_pspec(name: str, sds, mesh, rules):
+    axes_by_name = {
+        "tokens": ("batch", "seq"),
+        "labels": ("batch", "seq"),
+        "frames": ("batch", "seq", None),
+        "patches": ("batch", "seq", None),
+        "pos": (),
+    }
+    axes = axes_by_name.get(name, tuple([None] * len(sds.shape)))
+    axes = axes[: len(sds.shape)]
+    return logical_to_pspec(axes, sds.shape, mesh, rules)
+
+
+def build_cell(arch: str, shape_name: str, mesh, quick_layers: int = 0,
+               profile: str = "tp", moments: str = "zero1",
+               remat: bool = True):
+    """Returns (fn, args, in_shardings, out_shardings, rules)."""
+    from jax.sharding import NamedSharding
+
+    cfg = get_config(arch)
+    import dataclasses
+
+    if quick_layers:
+        cfg = dataclasses.replace(
+            cfg, n_layers=min(cfg.n_layers, quick_layers))
+    if not remat:
+        cfg = dataclasses.replace(cfg, remat=False)
+    model = build_model(cfg)
+    shape = SHAPES[shape_name]
+    base = FSDP_RULES if profile == "fsdp" else DEFAULT_RULES
+    if shape_name == "long_500k":
+        rules = dict(base, kv_seq="data")
+    elif shape.kind == "decode":
+        rules = dict(base, kv_seq="model", head_dim=None, qdh=None)
+    else:
+        rules = base
+
+    defs = model.param_defs()
+    a_params = abstract_params(defs)
+    p_spec = param_pspecs(defs, mesh, rules)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    p_sh = jax.tree.map(ns, p_spec)
+    specs = model.input_specs(shape)
+
+    if shape.kind == "train":
+        opt = AdamW(lr=1e-4)
+        step = make_train_step(model, opt, StepConfig())
+        f32_like = lambda t: jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, F32), t)
+        m_rules = dict(rules, layers="data") if moments == "zero1" else rules
+        m_spec = param_pspecs(defs, mesh, m_rules)
+        a_opt = AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                           m=f32_like(a_params), v=f32_like(a_params))
+        opt_sh = AdamWState(
+            step=ns(logical_to_pspec((), (), mesh, rules)),
+            m=jax.tree.map(ns, m_spec), v=jax.tree.map(ns, m_spec))
+        batch_sh = {
+            k: ns(_input_pspec(k, v, mesh, rules)) for k, v in specs.items()}
+        args = (a_params, a_opt, specs)
+        in_sh = (p_sh, opt_sh, batch_sh)
+        out_sh = (p_sh, opt_sh, None)
+        fn = step
+    elif shape.kind == "prefill":
+        cache_defs = model.cache_defs(shape.global_batch, shape.seq_len)
+        a_cache = jax.tree.map(
+            lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), cache_defs,
+            is_leaf=lambda x: hasattr(x, "axes"))
+        cache_sh = jax.tree.map(ns, param_pspecs(cache_defs, mesh, rules))
+        batch_sh = {
+            k: ns(_input_pspec(k, v, mesh, rules)) for k, v in specs.items()}
+        args = (a_params, specs, a_cache)
+        in_sh = (p_sh, batch_sh, cache_sh)
+        out_sh = (None, cache_sh)
+        fn = model.prefill
+    else:  # decode
+        cache_sds = specs["cache"]
+        cache_defs = model.cache_defs(shape.global_batch, shape.seq_len)
+        cache_sh = jax.tree.map(ns, param_pspecs(cache_defs, mesh, rules))
+        tok_sh = ns(_input_pspec("tokens", specs["tokens"], mesh, rules))
+        pos_sh = ns(logical_to_pspec((), (), mesh, rules))
+        args = (a_params, cache_sds, specs["tokens"], specs["pos"])
+        in_sh = (p_sh, cache_sh, tok_sh, pos_sh)
+        out_sh = (None, cache_sh)
+        fn = model.decode
+    return fn, args, in_sh, out_sh, rules
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             outdir: str, quick_layers: int = 0,
+             keep_hlo: bool = False, profile: str = "tp",
+             moments: str = "zero1", remat: bool = True) -> Dict[str, Any]:
+    os.makedirs(outdir, exist_ok=True)
+    out_path = os.path.join(outdir, f"{arch}__{shape_name}.json")
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "devices": int(np.prod(list(mesh.shape.values()))),
+        "status": "running",
+    }
+    t0 = time.time()
+    try:
+        fn, args, in_sh, out_sh, rules = build_cell(
+            arch, shape_name, mesh, quick_layers, profile=profile,
+            moments=moments, remat=remat)
+        with use_rules(rules), mesh:
+            jaxpr = jax.make_jaxpr(fn)(*args)
+            global_cost = jaxpr_cost(jaxpr)
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+        rec.update({
+            "status": "ok",
+            "lower_seconds": round(t_lower, 2),
+            "compile_seconds": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "generated_code_bytes": mem.generated_code_size_in_bytes,
+            },
+            "cost": {k: float(v) for k, v in cost.items()
+                     if isinstance(v, (int, float))
+                     and k in ("flops", "bytes accessed")},
+            "global_cost": global_cost,   # exact, loop-aware, whole program
+            "collectives": collective_bytes(hlo),  # per device, loop-aware
+            "hlo_bytes": len(hlo),
+        })
+        if keep_hlo:
+            with open(out_path.replace(".json", ".hlo.txt"), "w") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001 - record the failure, keep sweeping
+        rec.update({
+            "status": "fail",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        })
+    rec["wall_seconds"] = round(time.time() - t0, 2)
+    with open(out_path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, help="comma list; default all")
+    p.add_argument("--shape", default=None, help="comma list; default all")
+    p.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                      "both"])
+    p.add_argument("--outdir", default="results/dryrun")
+    p.add_argument("--quick-layers", type=int, default=0,
+                   help="truncate layer count (CI smoke only)")
+    p.add_argument("--profile", default="tp", choices=["tp", "fsdp"],
+                   help="sharding profile (see dist/sharding.py)")
+    p.add_argument("--moments", default="zero1", choices=["zero1", "tp"],
+                   help="optimizer-moment sharding")
+    p.add_argument("--no-remat", action="store_true",
+                   help="disable activation rematerialization")
+    p.add_argument("--keep-hlo", action="store_true")
+    args = p.parse_args()
+
+    archs = args.arch.split(",") if args.arch else ARCHS
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("pod256", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("pod512", make_production_mesh(multi_pod=True)))
+
+    failures = []
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            cells = shapes_for(arch)
+            shape_names = (args.shape.split(",") if args.shape
+                           else list(cells))
+            for shape_name in shape_names:
+                if shape_name not in cells:
+                    print(f"SKIP {mesh_name} {arch} {shape_name} "
+                          f"(documented inapplicability)", flush=True)
+                    continue
+                rec = run_cell(arch, shape_name, mesh, mesh_name,
+                               os.path.join(args.outdir, mesh_name),
+                               quick_layers=args.quick_layers,
+                               keep_hlo=args.keep_hlo,
+                               profile=args.profile, moments=args.moments,
+                               remat=not args.no_remat)
+                flops = rec.get("global_cost", {}).get("flops", float("nan"))
+                coll = sum(v["bytes"] for v in
+                           rec.get("collectives", {}).values()) if \
+                    rec.get("collectives") else float("nan")
+                print(f"{rec['status']:4s} {mesh_name} {arch:22s} "
+                      f"{shape_name:12s} {rec['wall_seconds']:8.1f}s "
+                      f"gflops={flops/1e9:.3e} collMB={coll/1e6:.1f}",
+                      flush=True)
+                if rec["status"] != "ok":
+                    failures.append((mesh_name, arch, shape_name,
+                                     rec.get("error")))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("dry run complete: all cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""repro.mem — calibrated two-tier memory simulator + workload models used
+for the paper-faithful reproduction experiments (see DESIGN.md Sec. 9)."""
+
+from .simulator import (
+    GB,
+    MemorySimulator,
+    PhaseRecord,
+    SimResult,
+    SimSite,
+    SimWorkload,
+)
+from . import workloads
+
+__all__ = [
+    "GB",
+    "MemorySimulator",
+    "PhaseRecord",
+    "SimResult",
+    "SimSite",
+    "SimWorkload",
+    "workloads",
+]

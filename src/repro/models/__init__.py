@@ -1,0 +1,5 @@
+from .config import ModelConfig, SHAPES, SMOKE_SHAPES, ShapeConfig
+from .transformer import Model, build_model
+
+__all__ = ["Model", "ModelConfig", "SHAPES", "SMOKE_SHAPES", "ShapeConfig",
+           "build_model"]

@@ -1,0 +1,154 @@
+"""Declarative parameter definitions.
+
+Models are pure functions over nested dicts of arrays.  Parameters are
+declared as ``ArrayDef`` trees: shape + dtype + per-dimension *logical axis*
+names (resolved to mesh axes by ``repro.dist.sharding``) + an initializer.
+This gives us, from one declaration:
+
+* ``init_params``      — materialized arrays (deterministic per-path RNG),
+* ``abstract_params``  — ShapeDtypeStructs for AOT lowering (no allocation),
+* ``param_pspecs``     — PartitionSpecs per leaf for in_shardings,
+* ``register_sites``   — paper integration: every parameter subtree becomes
+  an allocation site (module path = call-path context, DESIGN.md Sec. 4).
+
+Layer stacks are expressed by ``stack`` (prepends a ``layers`` dimension) and
+executed with ``jax.lax.scan`` to keep compile time flat in depth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..dist.sharding import logical_to_pspec
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ArrayDef)
+
+
+def stack(defs: PyTree, n: int) -> PyTree:
+    """Prepend a ``layers`` dimension of size n to every leaf."""
+    return jax.tree.map(
+        lambda d: ArrayDef((n,) + d.shape, ("layers",) + d.axes, d.dtype,
+                           d.init, d.scale),
+        defs,
+        is_leaf=is_def,
+    )
+
+
+def _leaf_init(d: ArrayDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    std = d.scale if d.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    if d.init == "embed":
+        std = d.scale if d.scale is not None else 1.0
+    x = jax.random.normal(key, d.shape, jnp.float32) * std
+    return x.astype(d.dtype)
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+    )
+
+
+def init_params(defs: PyTree, key: jax.Array) -> PyTree:
+    """Deterministic init: every leaf's key is folded from a *stable* hash of
+    its path (crc32 — Python's ``hash`` is per-process salted and would break
+    cross-process reproducibility), so adding/removing parameters never
+    reshuffles the others."""
+    import zlib
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_def)
+    out = []
+    for path, d in leaves:
+        h = zlib.crc32(_path_str(path).encode())
+        out.append(_leaf_init(d, jax.random.fold_in(key, h)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(defs: PyTree) -> PyTree:
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def param_pspecs(defs: PyTree, mesh: Mesh, rules=None) -> PyTree:
+    return jax.tree.map(
+        lambda d: logical_to_pspec(d.axes, d.shape, mesh, rules),
+        defs,
+        is_leaf=is_def,
+    )
+
+
+def param_shardings(defs: PyTree, mesh: Mesh, rules=None,
+                    memory_kind: Optional[str] = None) -> PyTree:
+    from jax.sharding import NamedSharding
+
+    def _mk(d: ArrayDef):
+        spec = logical_to_pspec(d.axes, d.shape, mesh, rules)
+        if memory_kind is None:
+            return NamedSharding(mesh, spec)
+        return NamedSharding(mesh, spec, memory_kind=memory_kind)
+
+    return jax.tree.map(_mk, defs, is_leaf=is_def)
+
+
+def tree_bytes(defs: PyTree) -> int:
+    total = 0
+    for d in jax.tree.leaves(defs, is_leaf=is_def):
+        total += int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+    return total
+
+
+def count_params(defs: PyTree) -> int:
+    return sum(int(np.prod(d.shape)) for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+# ------------------------------------------------------------ site binding
+def register_sites(defs: PyTree, registry, kind, arenas,
+                   prefix: str = "params"):
+    """Register every top-level parameter group as an allocation site and
+    report its bytes to the hybrid arena manager (paper Sec. 4.1).
+
+    Grouping at depth <= context_depth keeps the number of shared arenas
+    bounded exactly the way the paper's call-path truncation does.
+    """
+    leaves, _ = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_def)
+    groups: Dict[str, int] = {}
+    for path, d in leaves:
+        parts = [prefix] + [
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        ]
+        site_path = tuple(parts[: registry.context_depth])
+        nbytes = int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize
+        groups["/".join(site_path)] = groups.get("/".join(site_path), 0) + nbytes
+    out = {}
+    for site_path, nbytes in groups.items():
+        site = registry.register(site_path.split("/"), kind)
+        out[site_path] = arenas.allocate(site, nbytes)
+    return out

@@ -1,0 +1,87 @@
+"""ModelConfig — one dataclass describing every supported architecture
+family (dense / MoE / SSM / hybrid / xLSTM / enc-dec / VLM / audio)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch: str
+    family: str                 # dense | moe | hybrid | xlstm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    rope_theta: float = 10000.0
+    window: Optional[int] = None          # sliding-window attention (Mixtral)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_parallelism: str = "tp"           # "tp" | "ep"
+    capacity_factor: float = 1.0
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    attn_every: int = 0                   # hybrid: shared attn every k layers
+    # xLSTM
+    slstm_every: int = 0                  # one sLSTM per k layers
+    # enc-dec
+    enc_layers: int = 0
+    # modality frontend stubs
+    frontend: Optional[str] = None        # "audio" | "vision"
+    frontend_tokens: int = 0              # patches / frames in the prefix
+    dtype: object = jnp.bfloat16
+    # training
+    remat: bool = True
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def validate(self) -> "ModelConfig":
+        assert self.n_heads % max(self.kv_heads, 1) == 0, "GQA grouping"
+        if self.family == "moe":
+            assert self.n_experts > 0 and self.top_k > 0
+        if self.family == "hybrid":
+            assert self.ssm_state > 0 and self.attn_every > 0
+        if self.family == "encdec":
+            assert self.enc_layers > 0
+        return self
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # "train" | "prefill" | "decode"
+
+
+# The assigned input-shape set (identical for every LM arch).
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# Smoke-scale shapes for CPU tests.
+SMOKE_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 128, 4, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 128, 2, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 128, 4, "decode"),
+    "long_500k": ShapeConfig("long_500k", 256, 1, "decode"),
+}

@@ -1,0 +1,330 @@
+"""Core transformer layers: RMSNorm, rotary embeddings, GQA attention
+(training/prefill via chunked online-softmax, decode against a KV cache,
+optional sliding window, optional cross-attention), SwiGLU MLP, embeddings.
+
+All functions are pure; parameters are nested dicts produced from the
+``ArrayDef`` declarations.  Activation sharding is expressed with logical
+axes via ``constrain`` so the same code partitions on any mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import constrain
+from .common import ArrayDef
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ rmsnorm
+def rmsnorm_defs(d: int):
+    return {"scale": ArrayDef((d,), ("embed",), init="ones")}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(F32)), axis=-1, keepdims=True)
+    y = x.astype(F32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(F32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = (theta ** (-np.arange(0, half, dtype=np.float32) / half))
+    angles = positions[..., :, None].astype(F32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: Optional[int] = None      # sliding-window size (None = full)
+    causal: bool = True
+
+
+def attention_defs(cfg: AttnConfig):
+    d, H, K, dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.head_dim
+    return {
+        "wq": ArrayDef((d, H, dh), ("embed", "heads", None)),
+        "wk": ArrayDef((d, K, dh), ("embed", "kv_heads", None)),
+        "wv": ArrayDef((d, K, dh), ("embed", "kv_heads", None)),
+        "wo": ArrayDef((H, dh, d), ("heads", None, "embed")),
+    }
+
+
+def _qkv(p, x, cfg: AttnConfig, positions, kv_x=None, use_rope=True):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "kv_seq", "kv_heads", None))
+    v = constrain(v, ("batch", "kv_seq", "kv_heads", None))
+    if use_rope and kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, cfg: AttnConfig, cross: bool):
+    """(…, Sq, Sk) boolean mask of *allowed* attention."""
+    if cross:
+        return None
+    allowed = k_pos[..., None, :] <= q_pos[..., :, None]
+    if cfg.window is not None:
+        allowed &= (q_pos[..., :, None] - k_pos[..., None, :]) < cfg.window
+    return allowed
+
+
+def _attend(q, k, v, mask, cfg: AttnConfig, q_chunk: int = 1024):
+    """Grouped-query attention with chunked-q exact softmax.
+
+    q: (B, Sq, H, dh); k/v: (B, Sk, K, dh).  Memory per chunk is
+    O(B*H*q_chunk*Sk), never O(Sq*Sk).
+    """
+    B, Sq, H, dh = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = 1.0 / np.sqrt(dh)
+    qg = q.reshape(B, Sq, K, G, dh)
+
+    n_chunks = max(1, Sq // q_chunk) if Sq % q_chunk == 0 else 1
+    qc = Sq // n_chunks
+
+    @jax.checkpoint
+    def one_chunk(args):
+        # Rematerialized: the (qc, Sk) score block is never stored for the
+        # backward pass — flash-style memory behaviour at XLA level.  The
+        # Pallas kernel (kernels/flash_attention.py) replaces this on TPU.
+        q_blk, mask_blk = args  # (B, qc, K, G, dh), (qc, Sk) | None
+        s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk, k,
+                       preferred_element_type=F32) * scale
+        if mask_blk is not None:
+            s = jnp.where(mask_blk[None, None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(F32))
+        return o.astype(v.dtype)
+
+    if n_chunks == 1:
+        out = one_chunk((qg, mask))
+    else:
+        qs = qg.reshape(B, n_chunks, qc, K, G, dh).transpose(1, 0, 2, 3, 4, 5)
+        ms = (
+            mask.reshape(n_chunks, qc, -1)
+            if mask is not None
+            else jnp.zeros((n_chunks, 0, 0), bool)
+        )
+        outs = jax.lax.map(
+            lambda a: one_chunk((a[0], a[1] if mask is not None else None)),
+            (qs, ms),
+        )
+        out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, K, G, dh)
+    return out.reshape(B, Sq, H, dh)
+
+
+def attention(p, x, cfg: AttnConfig, positions, kv_x=None,
+              kv_positions=None, q_chunk: int = 1024):
+    """Full attention for training/prefill (self or cross)."""
+    cross = kv_x is not None
+    q, k, v = _qkv(p, x, cfg, positions, kv_x=kv_x, use_rope=not cross)
+    k_pos = kv_positions if kv_positions is not None else positions
+    mask = _mask(positions[0], k_pos[0], cfg, cross)  # same for all batch rows
+    out = _attend(q, k, v, mask, cfg, q_chunk=q_chunk)
+    out = constrain(out, ("batch", "seq", "heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return constrain(y, ("batch", "seq", "embed"))
+
+
+# ------------------------------------------------------------ decode (1 tok)
+def attention_decode(p, x, cache_k, cache_v, pos, cfg: AttnConfig):
+    """One-token decode: update the cache at ``pos`` and attend over it.
+
+    x: (B, 1, d); cache_k/v: (B, S_max, K, dh); pos: scalar int32.
+    Returns (y, new_cache_k, new_cache_v).
+    """
+    B, S_max, K, dh = cache_k.shape
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k1 = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v1 = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k1 = rope(k1, positions, cfg.rope_theta)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k1.astype(cache_k.dtype),
+                                           (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v1.astype(cache_v.dtype),
+                                           (0, pos, 0, 0))
+    cache_k = constrain(cache_k, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    cache_v = constrain(cache_v, ("batch", "kv_seq", "kv_heads", "head_dim"))
+
+    H = cfg.n_heads
+    G = H // K
+    # Match the cache layout (kv_heads replicated when K < model axis,
+    # head_dim sharded): without this, SPMD re-shards the whole cache per
+    # step ("involuntary full rematerialization" — a per-token all-gather of
+    # the KV cache).  Contraction over the sharded head_dim instead costs a
+    # small psum of the (B,K,G,S) scores.
+    qg = constrain(q.reshape(B, K, G, dh),
+                   ("batch", "kv_heads", None, "qdh"))
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(F32),
+                   cache_k.astype(F32))
+    s *= 1.0 / np.sqrt(dh)
+    k_pos = jnp.arange(S_max)
+    allowed = k_pos <= pos
+    if cfg.window is not None:
+        allowed &= (pos - k_pos) < cfg.window
+    s = jnp.where(allowed[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, cache_v.astype(F32))
+    o = o.astype(x.dtype)
+    y = jnp.einsum("bhk,hkd->bd", o.reshape(B, H, dh), p["wo"])[:, None]
+    return constrain(y, ("batch", "seq", "embed")), cache_k, cache_v
+
+
+def attention_decode_ring(p, x, cache_k, cache_v, pos, cfg: AttnConfig):
+    """One-token decode against a *ring-buffer* KV cache of size window
+    (sliding-window attention never needs older entries — §Perf climb #3).
+
+    cache_k/v: (B, W, K, dh) where W == cfg.window; slot = pos % W.  Keys are
+    stored rope'd at their absolute positions, so ring rotation is free.
+    """
+    B, W, K, dh = cache_k.shape
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k1 = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v1 = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k1 = rope(k1, positions, cfg.rope_theta)
+    slot = jax.lax.rem(pos, W)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k1.astype(cache_k.dtype),
+                                           (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v1.astype(cache_v.dtype),
+                                           (0, slot, 0, 0))
+    cache_k = constrain(cache_k, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    cache_v = constrain(cache_v, ("batch", "kv_seq", "kv_heads", "head_dim"))
+
+    H = cfg.n_heads
+    G = H // K
+    qg = constrain(q.reshape(B, K, G, dh),
+                   ("batch", "kv_heads", None, "qdh"))
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(F32), cache_k.astype(F32))
+    s *= 1.0 / np.sqrt(dh)
+    # Ring validity: during warmup (pos < W-1) only slots <= pos hold data;
+    # afterwards every slot is within the window by construction.
+    valid = jnp.arange(W) <= pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, cache_v.astype(F32))
+    o = o.astype(x.dtype)
+    y = jnp.einsum("bhk,hkd->bd", o.reshape(B, H, dh), p["wo"])[:, None]
+    return constrain(y, ("batch", "seq", "embed")), cache_k, cache_v
+
+
+def cross_attention_decode(p, x, mem_k, mem_v, cfg: AttnConfig):
+    """Decode-time cross attention over precomputed encoder memory."""
+    B = x.shape[0]
+    H, K = cfg.n_heads, cfg.kv_heads
+    dh = cfg.head_dim
+    G = H // K
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"]).reshape(B, K, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(F32),
+                   mem_k.astype(F32)) / np.sqrt(dh)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, mem_v.astype(F32)).astype(x.dtype)
+    y = jnp.einsum("bhk,hkd->bd", o.reshape(B, H, dh), p["wo"])[:, None]
+    return y
+
+
+# --------------------------------------------------------------------- mlp
+def mlp_defs(d: int, f: int):
+    return {
+        "w_gate": ArrayDef((d, f), ("embed", "mlp")),
+        "w_up": ArrayDef((d, f), ("embed", "mlp")),
+        "w_down": ArrayDef((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    h = constrain(h, ("batch", "seq", "mlp"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    return constrain(y, ("batch", "seq", "embed"))
+
+
+# -------------------------------------------------------------- embeddings
+def embed_defs(vocab: int, d: int):
+    return {"tok": ArrayDef((vocab, d), ("vocab", "embed"), init="embed",
+                            scale=0.02)}
+
+
+def embed(p, tokens):
+    out = jnp.take(p["tok"], tokens, axis=0)
+    return constrain(out, ("batch", "seq", "embed"))
+
+
+def lm_head_defs(d: int, vocab: int):
+    return {"w": ArrayDef((d, vocab), ("embed", "vocab"))}
+
+
+def lm_head(p, x):
+    logits = jnp.einsum("bsd,dv->bsv", x, p["w"]).astype(F32)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def cross_entropy(logits, labels, ignore: int = -1):
+    """Mean CE over non-ignored positions.  logits f32 (B,S,V)."""
+    mask = (labels != ignore)
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)
+
+
+def chunked_lm_loss(head_p, x, labels, ignore: int = -1,
+                    chunk: int = 512):
+    """lm_head + CE without materializing (B,S,V) f32 logits: the sequence
+    is processed in rematerialized chunks (critical for 256k vocabularies).
+    Returns (sum_nll, count) reduced over the whole batch."""
+    B, S, d = x.shape
+    n = max(1, S // chunk) if S % chunk == 0 else 1
+    xs = x.reshape(B, n, S // n, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n, S // n).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def one(args):
+        xc, lc = args
+        logits = lm_head(head_p, xc)
+        mask = (lc != ignore)
+        safe = jnp.where(mask, lc, 0)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        return ((logz - gold) * mask).sum(), mask.sum()
+
+    if n == 1:
+        nll, cnt = one((xs[0], ls[0]))
+    else:
+        nlls, cnts = jax.lax.map(one, (xs, ls))
+        nll, cnt = nlls.sum(), cnts.sum()
+    return nll / jnp.maximum(cnt, 1)

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts layer (Mixtral / granite-MoE style).
+
+Top-k routing with capacity-bounded scatter dispatch (tokens over capacity
+are dropped, GShard-style) — no (B,S,E,C) one-hot tensors, so the dispatch
+buffers stay O(E*C*d).
+
+Parallelism modes:
+* ``tp`` (default): expert FFN hidden dim sharded over the model axis; the
+  dispatch buffers shard over data via the token dim.  Works for any expert
+  count (40 experts on a 16-way axis included).
+* ``ep``: experts sharded over the model axis; expert count is padded up to
+  a multiple of the axis with *dead* experts that the router masks to zero
+  probability (semantics preserved exactly).  Dispatch/combine become
+  all-to-alls on the model axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import constrain
+from .common import ArrayDef
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.0
+    parallelism: str = "tp"          # "tp" | "ep"
+    ep_axis_size: int = 16           # pad target for ep mode
+
+    @property
+    def padded_experts(self) -> int:
+        if self.parallelism != "ep":
+            return self.n_experts
+        m = self.ep_axis_size
+        return ((self.n_experts + m - 1) // m) * m
+
+
+def moe_defs(cfg: MoEConfig):
+    E = cfg.padded_experts
+    expert_axis = "experts" if cfg.parallelism == "ep" else None
+    mlp_axis = None if cfg.parallelism == "ep" else "mlp"
+    return {
+        "router": ArrayDef((cfg.d_model, E), ("embed", None), dtype=F32),
+        "w_gate": ArrayDef((E, cfg.d_model, cfg.d_ff),
+                           (expert_axis, "embed", mlp_axis)),
+        "w_up": ArrayDef((E, cfg.d_model, cfg.d_ff),
+                         (expert_axis, "embed", mlp_axis)),
+        "w_down": ArrayDef((E, cfg.d_ff, cfg.d_model),
+                           (expert_axis, mlp_axis, "embed")),
+    }
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    cap = int(np.ceil(tokens * cfg.top_k / cfg.padded_experts
+                      * cfg.capacity_factor))
+    return max(8, -(-cap // 8) * 8)  # pad to a multiple of 8
+
+
+def moe(p, x, cfg: MoEConfig):
+    """x: (B, S, d) -> (B, S, d).  Dropped tokens pass through (residual).
+
+    Dispatch is *per batch row* (GShard's per-group capacity): slot
+    assignment (cumsum), scatter and gather all happen within a row, so on a
+    batch-sharded mesh every dispatch structure stays shard-local — no
+    collective is needed beyond the expert matmuls' own sharding.  (A global
+    dispatch here costs TiBs of all-reduce per step; see EXPERIMENTS.md
+    §Perf climb #2.)
+    """
+    B, S, d = x.shape
+    E = cfg.padded_experts
+    C = _capacity(S, cfg)                                       # per row
+    Tk = S * cfg.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(F32), p["router"])
+    if E != cfg.n_experts:  # mask dead padding experts
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, cfg.top_k)     # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                  # renormalize
+
+    # Slot assignment within each row: running count of earlier picks of the
+    # same expert.  int16 is enough (C < 32768 at these shapes) and halves
+    # the cumsum buffer.
+    flat_e = expert_ids.reshape(B, Tk)                           # (B, Tk)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int16)          # (B, Tk, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) - onehot
+    slot = jnp.take_along_axis(
+        pos_in_e, flat_e[..., None].astype(jnp.int32), axis=2)[..., 0]
+    slot = slot.astype(jnp.int32)
+    in_cap = slot < C
+
+    # Scatter tokens into per-row (E, C, d) buffers.  vmap over rows keeps
+    # the batch dim a *batching* dim of the scatter (GSPMD partitions it);
+    # indexing it with an arange would make it a scattered dim and force the
+    # partitioner to replicate + all-reduce the whole buffer.
+    xk = jnp.repeat(x, cfg.top_k, axis=1)                        # (B, Tk, d)
+    upd = jnp.where(in_cap[..., None], xk, 0).astype(x.dtype)
+    safe_slot = jnp.where(in_cap, slot, C - 1)
+
+    def row_scatter(e_row, s_row, u_row):
+        return jnp.zeros((E, C, d), x.dtype).at[e_row, s_row].add(u_row)
+
+    buf = jax.vmap(row_scatter)(flat_e, safe_slot, upd)
+    buf = constrain(buf, ("batch", "experts", None, "embed"))
+
+    # Expert FFN (SwiGLU), batched over (row, expert).
+    g = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    h = constrain(h, ("batch", "experts", None, "mlp"))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    # NOTE: no sharding constraint here — out_buf is a partial sum over the
+    # model-sharded ffn dim, and gather/combine are linear, so the psum can
+    # ride through to the (B,S,d) output: 12.5x fewer all-reduce bytes than
+    # reducing the capacity-inflated buffer (§Perf climb #2, change 3).
+
+    # Gather back and combine with gates (vmapped for the same reason).
+    def row_gather(o_row, e_row, s_row):
+        return o_row[e_row, s_row]
+
+    gathered = jax.vmap(row_gather)(
+        out_buf, flat_e, jnp.where(in_cap, slot, 0))              # (B,Tk,d)
+    gathered = jnp.where(in_cap[..., None], gathered, 0)
+    gathered = gathered.reshape(B, S, cfg.top_k, d)
+    y = jnp.einsum("bskd,bsk->bsd", gathered.astype(F32),
+                   gate_vals).astype(x.dtype)
+    return constrain(y, ("batch", "seq", "embed"))
+
+
+def moe_decode(p, x, cfg: MoEConfig):
+    """Decode-time MoE for a single token per sequence: dense top-k gather of
+    expert weights would be ragged; with one token the capacity path is
+    overkill, so route through the same code with T=B tokens."""
+    return moe(p, x, cfg)

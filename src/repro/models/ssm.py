@@ -1,0 +1,193 @@
+"""Mamba2 (state-space duality) block — pure JAX reference implementation.
+
+Training/prefill uses the chunked SSD algorithm (quadratic within chunks,
+linear recurrence across chunks, ``lax.scan`` over chunk states); decode is
+the O(1)-per-token recurrence.  The intra-chunk einsums are the compute hot
+spot that ``kernels/ssd_scan.py`` implements as a Pallas TPU kernel.
+
+Head/state conventions follow Mamba2 defaults: head dim P, state dim N,
+one B/C group shared by all heads (n_groups=1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import constrain
+from .common import ArrayDef
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int          # expand * d_model
+    head_dim: int = 64    # P
+    state_dim: int = 64   # N
+    conv_width: int = 4
+    chunk: int = 128
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def ssm_defs(cfg: SSMConfig):
+    d, di, H, N = cfg.d_model, cfg.d_inner, cfg.n_heads, cfg.state_dim
+    W = cfg.conv_width
+    return {
+        "w_z": ArrayDef((d, di), ("embed", "d_inner")),
+        "w_x": ArrayDef((d, di), ("embed", "d_inner")),
+        "w_B": ArrayDef((d, N), ("embed", None)),
+        "w_C": ArrayDef((d, N), ("embed", None)),
+        "w_dt": ArrayDef((d, H), ("embed", "ssm_heads")),
+        "dt_bias": ArrayDef((H,), ("ssm_heads",), dtype=F32, init="zeros"),
+        "a_log": ArrayDef((H,), ("ssm_heads",), dtype=F32, init="zeros"),
+        "D": ArrayDef((H,), ("ssm_heads",), dtype=F32, init="ones"),
+        "conv_x": ArrayDef((W, di), ("conv", "d_inner"), init="normal",
+                           scale=0.5),
+        "norm": ArrayDef((di,), ("d_inner",), init="ones"),
+        "w_out": ArrayDef((di, d), ("d_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds.  x: (B,S,C); w: (W,C)."""
+    W = w.shape[0]
+    out = x * w[W - 1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + shifted * w[W - 1 - i]
+    return out
+
+
+def _inputs(p, u, cfg: SSMConfig):
+    """Common projections.  u: (B,S,d)."""
+    z = jnp.einsum("bsd,de->bse", u, p["w_z"])
+    x = jnp.einsum("bsd,de->bse", u, p["w_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", u, p["w_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", u, p["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", u, p["w_dt"]).astype(F32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    dt = jnp.clip(dt, cfg.dt_min, cfg.dt_max * 100)
+    return z, x, Bm, Cm, dt
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, cfg: SSMConfig,
+                init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) already conv'd/activated; dt: (B,S,H) f32;
+    A: (H,) f32 negative; Bm/Cm: (B,S,N).
+    Returns y (B,S,H,P) and final state (B,H,N,P).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(cfg.chunk, S)
+    nc = S // Q
+    assert S % Q == 0, "sequence must be divisible by the SSD chunk"
+
+    # One scan over chunks: each step computes the intra-chunk causal block
+    # (quadratic in Q only) plus the carried-state contribution, then updates
+    # the running state.  Live intermediates stay O(B*Q*Q*H) for one chunk.
+    xs = x.reshape(Bsz, nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    dts = dt.reshape(Bsz, nc, Q, H).transpose(1, 0, 2, 3)
+    Bs = Bm.reshape(Bsz, nc, Q, N).astype(F32).transpose(1, 0, 2, 3)
+    Cs = Cm.reshape(Bsz, nc, Q, N).astype(F32).transpose(1, 0, 2, 3)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, H, N, P), F32)
+
+    @jax.checkpoint
+    def step(s_prev, inp):
+        xc, dtc, Bc, Cc = inp              # (B,Q,H,P) (B,Q,H) (B,Q,N) (B,Q,N)
+        a = dtc * A                         # (B,Q,H) log decay, negative
+        a_cum = jnp.cumsum(a, axis=1)
+        a_tot = a_cum[:, -1]                # (B,H)
+        xdt = xc.astype(F32) * dtc[..., None]
+        # decay(i,j) = exp(a_cum[i]-a_cum[j]) masked to j<=i.  Mask the
+        # exponent (not the result): exp of the unmasked upper triangle
+        # overflows and would poison gradients through the where.
+        diff = a_cum[:, :, None, :] - a_cum[:, None, :, :]   # (B,Q,Q,H)
+        diff = jnp.where(causal[None, :, :, None], diff, -1e30)
+        L = jnp.exp(diff)
+        scores = jnp.einsum("bin,bjn->bij", Cc, Bc)          # (B,Q,Q)
+        y_diag = jnp.einsum("bij,bijh,bjhp->bihp", scores, L, xdt)
+        # carried state contribution
+        y_off = jnp.einsum("bin,bih,bhnp->bihp", Cc, jnp.exp(a_cum), s_prev)
+        # state update
+        decay_to_end = jnp.exp(a_tot[:, None, :] - a_cum)    # (B,Q,H)
+        s_chunk = jnp.einsum("bjn,bjh,bjhp->bhnp", Bc, decay_to_end, xdt)
+        s_new = s_chunk + jnp.exp(a_tot)[..., None, None] * s_prev
+        return s_new, y_diag + y_off
+
+    final, ys = jax.lax.scan(step, init_state, (xs, dts, Bs, Cs))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def ssm_forward(p, u, cfg: SSMConfig, return_state: bool = False):
+    """Full Mamba2 block for training/prefill.  u: (B,S,d).
+
+    With ``return_state`` also returns (conv_state, ssm_state) so a decode
+    loop can continue exactly where the prefill left off."""
+    B, S, d = u.shape
+    H, P, N = cfg.n_heads, cfg.head_dim, cfg.state_dim
+    z, x, Bm, Cm, dt = _inputs(p, u, cfg)
+    x_pre = x                                   # pre-conv projections
+    x = _causal_conv(x, p["conv_x"])
+    x = jax.nn.silu(x.astype(F32)).astype(u.dtype)
+    xh = x.reshape(B, S, H, P)
+    A = -jnp.exp(p["a_log"])
+    y, final_state = ssd_chunked(xh, dt, A, Bm, Cm, cfg)
+    y = y + xh.astype(F32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z.astype(F32)).astype(u.dtype)
+    # grouped RMSNorm (per d_inner)
+    var = jnp.mean(jnp.square(y.astype(F32)), axis=-1, keepdims=True)
+    y = (y.astype(F32) * jax.lax.rsqrt(var + 1e-6) * p["norm"]).astype(u.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    if return_state:
+        W = cfg.conv_width
+        conv_state = x_pre[:, S - (W - 1):]      # (B, W-1, d_inner)
+        return out, conv_state, final_state
+    return out
+
+
+def ssm_decode(p, u, conv_state, ssm_state, cfg: SSMConfig):
+    """One-token decode.  u: (B,1,d); conv_state: (B, W-1, d_inner);
+    ssm_state: (B,H,N,P) f32.  Returns (y, conv_state, ssm_state)."""
+    B = u.shape[0]
+    H, P, N, W = cfg.n_heads, cfg.head_dim, cfg.state_dim, cfg.conv_width
+    z, x, Bm, Cm, dt = _inputs(p, u, cfg)         # all (B,1,*)
+    x1 = x[:, 0]                                   # (B, d_inner)
+    window = jnp.concatenate([conv_state, x1[:, None]], axis=1)  # (B,W,di)
+    xc = jnp.einsum("bwc,wc->bc", window, p["conv_x"])
+    new_conv = window[:, 1:]
+    xc = jax.nn.silu(xc.astype(F32)).astype(u.dtype)
+    xh = xc.reshape(B, H, P).astype(F32)
+
+    A = -jnp.exp(p["a_log"])                      # (H,)
+    dt1 = dt[:, 0]                                 # (B,H)
+    decay = jnp.exp(dt1 * A)                       # (B,H)
+    Bn = Bm[:, 0].astype(F32)                      # (B,N)
+    Cn = Cm[:, 0].astype(F32)
+    upd = jnp.einsum("bn,bhp->bhnp", Bn, xh * dt1[..., None])
+    new_state = decay[..., None, None] * ssm_state + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cn, new_state)  # (B,H,P)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z.astype(F32)).astype(u.dtype)
+    var = jnp.mean(jnp.square(y.astype(F32)), axis=-1, keepdims=True)
+    y = (y.astype(F32) * jax.lax.rsqrt(var + 1e-6) * p["norm"]).astype(u.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, new_conv, new_state

@@ -1,0 +1,237 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strictly recurrent), pure JAX.
+
+mLSTM uses a chunkwise-parallel form for training/prefill (decay-weighted
+attention within chunks + recurrent (C, n) state across chunks, mirroring the
+paper's linear-attention duality) and an O(1) recurrence for decode.  sLSTM
+is a time scan with exponential gating and the max-stabilizer state.
+
+Simplifications vs. the released code (documented in DESIGN.md): a single
+block family per layer (no conv frontends), gate exponents clipped for
+stability in bf16, group norm folded into a single RMS norm per block.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import constrain
+from .common import ArrayDef
+
+F32 = jnp.float32
+ICLIP = 5.0  # igate exponent clip
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0      # mLSTM up-projection
+    slstm_ff_factor: float = 4.0 / 3.0
+    chunk: int = 128
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+# ------------------------------------------------------------------- mLSTM
+def mlstm_defs(cfg: XLSTMConfig):
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return {
+        "w_up": ArrayDef((d, di), ("embed", "d_inner")),
+        "w_z": ArrayDef((d, di), ("embed", "d_inner")),
+        "w_q": ArrayDef((di, di), ("d_inner", None)),
+        "w_k": ArrayDef((di, di), ("d_inner", None)),
+        "w_v": ArrayDef((di, di), ("d_inner", None)),
+        "w_i": ArrayDef((di, H), ("d_inner", None), dtype=F32),
+        "w_f": ArrayDef((di, H), ("d_inner", None), dtype=F32),
+        "b_i": ArrayDef((H,), (None,), dtype=F32, init="zeros"),
+        "b_f": ArrayDef((H,), (None,), dtype=F32, init="ones"),
+        "norm": ArrayDef((di,), ("d_inner",), init="ones"),
+        "w_down": ArrayDef((di, d), ("d_inner", "embed")),
+    }
+
+
+def _mlstm_inputs(p, x, cfg: XLSTMConfig):
+    B, S, _ = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    up = jnp.einsum("bsd,de->bse", x, p["w_up"])
+    up = constrain(up, ("batch", "seq", "d_inner"))
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"])
+    q = jnp.einsum("bse,ef->bsf", up, p["w_q"]).reshape(B, S, H, dh)
+    k = jnp.einsum("bse,ef->bsf", up, p["w_k"]).reshape(B, S, H, dh)
+    v = jnp.einsum("bse,ef->bsf", up, p["w_v"]).reshape(B, S, H, dh)
+    ig = jnp.einsum("bse,eh->bsh", up.astype(F32), p["w_i"]) + p["b_i"]
+    fg = jnp.einsum("bse,eh->bsh", up.astype(F32), p["w_f"]) + p["b_f"]
+    ig = jnp.clip(ig, -ICLIP, ICLIP)
+    flog = jax.nn.log_sigmoid(fg)
+    return z, q, k, v, ig, flog
+
+
+def mlstm_parallel(p, x, cfg: XLSTMConfig, return_state: bool = False):
+    """Chunkwise-parallel mLSTM.  x: (B,S,d) -> (B,S,d); optionally also
+    the final (C, n) state for decode continuation."""
+    B, S, d = x.shape
+    H, dh = cfg.n_heads, cfg.head_dim
+    Q = min(cfg.chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    z, q, k, v, ig, flog = _mlstm_inputs(p, x, cfg)
+    scale = 1.0 / np.sqrt(dh)
+
+    def resh(t, tail):
+        return t.reshape((B, nc, Q) + tail).transpose(1, 0, 2, *range(3, 3 + len(tail)))
+
+    qs, ks, vs = (resh(t, (H, dh)) for t in (q, k, v))
+    igs, fls = (resh(t, (H,)) for t in (ig, flog))
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    C0 = jnp.zeros((B, H, dh, dh), F32)
+    n0 = jnp.zeros((B, H, dh), F32)
+
+    @jax.checkpoint
+    def step(carry, inp):
+        C, n = carry
+        qc, kc, vc, ic, fc = inp
+        fcum = jnp.cumsum(fc, axis=1)                   # (B,Q,H)
+        ftot = fcum[:, -1]
+        # intra-chunk decay: D[i,j] = exp(fcum_i - fcum_j + i_j), j<=i.
+        # Mask the exponent, not the result (grad-through-where safety).
+        dmat = fcum[:, :, None, :] - fcum[:, None, :, :] + ic[:, None, :, :]
+        dmat = jnp.where(causal[None, :, :, None], dmat, -1e30)
+        D = jnp.exp(dmat)
+        s = jnp.einsum("bihd,bjhd->bijh", qc.astype(F32), kc.astype(F32))
+        s = s * scale * D                                # (B,Q,Q,H)
+        y_intra = jnp.einsum("bijh,bjhd->bihd", s, vc.astype(F32))
+        # carried state: y_off = exp(fcum_i) * q_i C ; normalizer likewise
+        decay_i = jnp.exp(fcum)                          # (B,Q,H)
+        y_off = jnp.einsum("bihd,bhde,bih->bihe", qc.astype(F32) * scale, C,
+                           decay_i)
+        n_off = jnp.einsum("bihd,bhd,bih->bih", qc.astype(F32) * scale, n,
+                           decay_i)[..., None]
+        y = y_intra + y_off
+        nvec = jnp.einsum("bijh->bih", s)[..., None] + n_off
+        y = y / jnp.maximum(jnp.abs(nvec), 1.0)
+        # state update
+        dte = jnp.exp(ftot[:, None, :] - fcum + ic)      # (B,Q,H)
+        C_new = jnp.exp(ftot)[..., None, None] * C + jnp.einsum(
+            "bjhd,bjh,bjhe->bhde", kc.astype(F32), dte, vc.astype(F32))
+        n_new = jnp.exp(ftot)[..., None] * n + jnp.einsum(
+            "bjhd,bjh->bhd", kc.astype(F32), dte)
+        return (C_new, n_new), y
+
+    (C_f, n_f), ys = jax.lax.scan(step, (C0, n0), (qs, ks, vs, igs, fls))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, cfg.d_inner)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    var = jnp.mean(jnp.square(y.astype(F32)), axis=-1, keepdims=True)
+    y = (y.astype(F32) * jax.lax.rsqrt(var + 1e-6) * p["norm"]).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    out = constrain(out, ("batch", "seq", "embed"))
+    if return_state:
+        return out, C_f, n_f
+    return out
+
+
+def mlstm_decode(p, x, C, n, cfg: XLSTMConfig):
+    """One-token mLSTM step.  x: (B,1,d); C: (B,H,dh,dh) f32; n: (B,H,dh)."""
+    B = x.shape[0]
+    H, dh = cfg.n_heads, cfg.head_dim
+    z, q, k, v, ig, flog = _mlstm_inputs(p, x, cfg)
+    q1 = q[:, 0].astype(F32) / np.sqrt(dh)
+    k1, v1 = k[:, 0].astype(F32), v[:, 0].astype(F32)
+    f1, i1 = jnp.exp(flog[:, 0]), jnp.exp(ig[:, 0])      # (B,H)
+    C_new = f1[..., None, None] * C + i1[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k1, v1)
+    n_new = f1[..., None] * n + i1[..., None] * k1
+    y = jnp.einsum("bhd,bhde->bhe", q1, C_new)
+    denom = jnp.abs(jnp.einsum("bhd,bhd->bh", q1, n_new))[..., None]
+    y = y / jnp.maximum(denom, 1.0)
+    y = y.reshape(B, 1, cfg.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    var = jnp.mean(jnp.square(y.astype(F32)), axis=-1, keepdims=True)
+    y = (y.astype(F32) * jax.lax.rsqrt(var + 1e-6) * p["norm"]).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_down"])
+    return out, C_new, n_new
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_defs(cfg: XLSTMConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    ff = int(d * cfg.slstm_ff_factor)
+    gates = {}
+    for g in ("i", "f", "z", "o"):
+        gates[f"w_{g}"] = ArrayDef((d, H, dh), ("embed", None, None), dtype=F32)
+        gates[f"r_{g}"] = ArrayDef((H, dh, dh), (None, None, None), dtype=F32,
+                                   scale=0.3)
+        gates[f"b_{g}"] = ArrayDef((H, dh), (None, None), dtype=F32,
+                                   init="zeros")
+    gates.update({
+        "norm": ArrayDef((d,), ("embed",), init="ones"),
+        "w_ff1": ArrayDef((d, ff), ("embed", "mlp")),
+        "w_ff2": ArrayDef((ff, d), ("mlp", "embed")),
+    })
+    return gates
+
+
+def _slstm_cell(p, xt, state):
+    """xt: (B,H,dh) f32 gate preactivations computed outside per gate."""
+    (c, n, h, m) = state
+    pre = {}
+    for g in ("i", "f", "z", "o"):
+        pre[g] = xt[g] + jnp.einsum("bhd,hde->bhe", h, p[f"r_{g}"]) + p[f"b_{g}"]
+    ilog = jnp.clip(pre["i"], -ICLIP, ICLIP)
+    flog = jax.nn.log_sigmoid(pre["f"])
+    m_new = jnp.maximum(flog + m, ilog)
+    i_s = jnp.exp(ilog - m_new)
+    f_s = jnp.exp(flog + m - m_new)
+    z_t = jnp.tanh(pre["z"])
+    o_t = jax.nn.sigmoid(pre["o"])
+    c_new = f_s * c + i_s * z_t
+    n_new = f_s * n + i_s
+    h_new = o_t * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(p, x, cfg: XLSTMConfig, state=None):
+    """Recurrent sLSTM over the sequence.  x: (B,S,d)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    xf = x.astype(F32)
+    pre = {g: jnp.einsum("bsd,dhe->bshe", xf, p[f"w_{g}"])
+           for g in ("i", "f", "z", "o")}
+    if state is None:
+        # m starts at 0 to match the zero-initialized decode cache: the
+        # max(n,1) output clamp makes trajectories stabilizer-dependent, so
+        # prefill and decode must agree on the initial m exactly.
+        zero = jnp.zeros((B, H, dh), F32)
+        state = (zero, zero, zero, zero)
+
+    def step(carry, inp):
+        new = _slstm_cell(p, inp, carry)
+        return new, new[2]
+
+    xs = {g: pre[g].transpose(1, 0, 2, 3) for g in pre}
+    final, hs = jax.lax.scan(step, state, xs)
+    y = hs.transpose(1, 0, 2, 3).reshape(B, S, d).astype(x.dtype)
+    # small gated FFN (proj factor 4/3)
+    hff = jnp.einsum("bsd,df->bsf", y, p["w_ff1"])
+    hff = jax.nn.gelu(hff.astype(F32)).astype(x.dtype)
+    out = jnp.einsum("bsf,fd->bsd", hff, p["w_ff2"])
+    return constrain(out, ("batch", "seq", "embed")), final
+
+
+def slstm_decode(p, x, state, cfg: XLSTMConfig):
+    out, new_state = slstm_forward(p, x, cfg, state=state)
+    return out, new_state

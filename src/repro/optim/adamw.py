@@ -1,0 +1,97 @@
+"""AdamW with decoupled weight decay.
+
+Moments are f32 regardless of param dtype; the update is computed in f32 and
+cast back.  Weight decay is masked off for 1-D parameters (norm scales,
+biases, per-head gate vectors) — the conventional grouping.
+
+Moments are first-class *allocation sites* for the paper's tiering runtime:
+``moment_sites()`` groups them exactly like the parameter sites so the
+OnlineGDT controller can decide HBM-vs-host placement per group.  On the
+production mesh their ``layers`` dimension additionally shards over the data
+axis (ZeRO-1 style) via the MOMENTS_RULES overlay in ``repro.dist.sharding``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, F32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(zeros, params),
+            v=jax.tree.map(zeros, params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        if self.grad_clip is not None:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(F32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        else:
+            gnorm = jnp.zeros((), F32)
+            scale = jnp.ones((), F32)
+        lr = jnp.asarray(self._lr(step), F32)
+        b1, b2 = self.b1, self.b2
+
+        def upd(g, m, v, p):
+            g = g.astype(F32) * scale
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m2 / (1 - b1 ** step.astype(F32))
+            vhat = v2 / (1 - b2 ** step.astype(F32))
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim > 1:
+                delta = delta + self.weight_decay * p.astype(F32)
+            new_p = p.astype(F32) - lr * delta
+            return new_p.astype(p.dtype), m2, v2
+
+        flat = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, AdamWState(step, new_m, new_v), gnorm
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        step = step.astype(F32)
+        warm = peak * step / max(warmup, 1)
+        import numpy as np
+
+        progress = jnp.clip((step - warmup) / max(total - warmup, 1), 0, 1)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(np.pi * progress))
+        return jnp.where(step < warmup, warm, peak * cos)
+
+    return lr

@@ -1,0 +1,4 @@
+from .engine import Engine, Request, ServeConfig
+from .kvcache import Page, PagedKVPool
+
+__all__ = ["Engine", "Page", "PagedKVPool", "Request", "ServeConfig"]

@@ -1,0 +1,338 @@
+"""Batched serving engine with guided KV-page tiering.
+
+The engine serves dense/MoE decoder models from a paged two-tier KV cache
+(serve/kvcache.py).  Each *request* is an allocation site; its pages are the
+chunks.  Every decode step the engine (a) schedules up to ``max_batch``
+active requests, (b) ensures their pages are HBM-resident — swap-ins are the
+rental the controller pays for wrong placement, (c) runs the jitted paged
+decode step, (d) updates exact per-page access counts.  At the decision
+interval the paper's machinery runs end to end: profile -> age-fragmented
+thermos -> ski-rental break-even -> page migrations.
+
+Eviction between intervals (when a swap-in needs a free slot) follows the
+last recommendation; pages recommended fast never lose to pages recommended
+slow.  Policies "lru" and "fifo" are selectable baselines for the serving
+benchmark.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import CLX, TPU_V5E, GDTConfig, HardwareModel
+from ..core.fragmentation import ChunkStats, collapse_to_chunks, explode_profile
+from ..core.profiler import ArenaProfile, IntervalProfile
+from ..core.recommend import recommend
+from ..core.skirental import decide
+from ..models.layers import lm_head, mlp, rmsnorm, rope
+from ..models.moe import moe
+from ..models.transformer import Model
+from .kvcache import PagedKVPool
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 4
+    page_size: int = 16
+    hbm_pages: int = 64
+    host_pages: int = 256
+    policy: str = "gdt"            # gdt | lru | fifo
+    interval_steps: int = 16
+    strategy: str = "thermos"
+    num_fragments: int = 4
+    max_pages_per_seq: int = 32
+    # Algorithm 1's optional ReweightProfile: decay access counters each
+    # interval so placement tracks recent behaviour (sessions pause/resume
+    # far faster than HPC phase shifts, so serving defaults to decaying).
+    access_decay: float = 0.5
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    tokens: List[int]
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    state: str = "active"          # active | paused | finished
+    pos: int = 0                   # tokens written to KV so far
+    last_scheduled: int = 0
+
+
+class Engine:
+    def __init__(self, model: Model, params, cfg: ServeConfig,
+                 hw: HardwareModel = TPU_V5E):
+        assert model.cfg.family in ("dense", "moe"), \
+            "paged engine serves decoder LMs"
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.hw = hw
+        mc = model.cfg
+        self.pool = PagedKVPool(
+            n_layers=mc.n_layers, page_size=cfg.page_size,
+            kv_heads=mc.kv_heads, head_dim=model.attn_cfg.head_dim,
+            hbm_pages=cfg.hbm_pages, host_pages=cfg.host_pages,
+            dtype=mc.dtype)
+        self.requests: Dict[int, Request] = {}
+        self.step_count = 0
+        self.last_recs: Dict[int, bool] = {}   # page_id -> recommended fast
+        # Reserve one HBM slot as the write target for inactive batch rows,
+        # so the batched scatter never collides with a real page.
+        self.scratch_slot = self.pool.free_hbm.pop(0)
+        self._decode = jax.jit(self._build_decode())
+        self.swap_in_events = 0
+        self.decisions = []
+
+    # ========================================================= jit decode
+    def _build_decode(self):
+        model, cfg = self.model, self.cfg
+        mc = model.cfg
+        acfg = model.attn_cfg
+        K, dh = mc.kv_heads, acfg.head_dim
+        P = cfg.page_size
+        from ..kernels.ops import paged_attention
+
+        def step(params, k_pool, v_pool, tokens, page_table, lengths,
+                 write_slot, write_off, active):
+            """tokens: (B,1); page_table: (B,MP) HBM slots or -1;
+            lengths: (B,) incl. new token; write_slot/off: (B,) where the
+            new token's KV goes; active: (B,) bool."""
+            x = jnp.take(params["embed"]["tok"], tokens, axis=0)  # (B,1,d)
+
+            def body(carry, xs):
+                x = carry
+                lp, kp, vp = xs          # kp/vp: (N,P,K,dh)
+                h = rmsnorm(lp["ln1"], x)
+                B = h.shape[0]
+                q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])[:, 0]
+                k1 = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])[:, 0]
+                v1 = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])[:, 0]
+                posn = (lengths - 1)[:, None]
+                q = rope(q[:, None], posn, acfg.rope_theta)[:, 0]
+                k1 = rope(k1[:, None], posn, acfg.rope_theta)[:, 0]
+                # Inactive rows target the reserved scratch slot, so the
+                # batched scatter is always collision-free.
+                kp = kp.at[write_slot, write_off].set(k1.astype(kp.dtype))
+                vp = vp.at[write_slot, write_off].set(v1.astype(vp.dtype))
+                o = paged_attention(q, kp, vp, page_table, lengths,
+                                    window=acfg.window)
+                y = jnp.einsum("bhk,hkd->bd", o.reshape(B, acfg.n_heads, dh),
+                               lp["attn"]["wo"])[:, None]
+                x = x + y
+                h2 = rmsnorm(lp["ln2"], x)
+                if mc.family == "moe":
+                    x = x + moe(lp["moe"], h2, model.moe_cfg)
+                else:
+                    x = x + mlp(lp["mlp"], h2)
+                return x, (kp, vp)
+
+            x, (nk, nv) = jax.lax.scan(
+                body, x, (params["layers"], k_pool, v_pool))
+            x = rmsnorm(params["final_ln"], x)
+            logits = lm_head(params["head"], x)[:, 0]
+            return logits, nk, nv
+
+        return step
+
+    # ========================================================== requests
+    def add_request(self, request_id: int, prompt: List[int],
+                    max_new: int = 8) -> None:
+        req = Request(request_id=request_id, tokens=list(prompt),
+                      max_new=max_new)
+        self.requests[request_id] = req
+        # Prefill by stepping the prompt tokens through decode (exact; the
+        # contiguous fast path is model.prefill + paginate, not needed at
+        # engine-test scale).  The last prompt token is fed by the first
+        # step(), whose logits produce the first generated token.
+        for t in prompt[:-1]:
+            self._decode_one(req, t)
+
+    def pause(self, request_id: int):
+        self.requests[request_id].state = "paused"
+
+    def resume(self, request_id: int):
+        req = self.requests[request_id]
+        if req.state == "paused":
+            req.state = "active"
+
+    # ------------------------------------------------------- page mgmt
+    def _page_for_write(self, req: Request) -> tuple:
+        """(hbm_slot, offset) for the next token; allocates as needed."""
+        idx, off = divmod(req.pos, self.cfg.page_size)
+        pages = self.pool.request_pages(req.request_id)
+        if idx >= len(pages):
+            self._ensure_free_hbm(1, needed=[p.page_id for p in pages])
+            page = self.pool.allocate(req.request_id, idx, self.step_count)
+            pages.append(page)
+        page = pages[idx]
+        if page.hbm_slot is None:
+            self._ensure_free_hbm(
+                1, needed=[p.page_id for p in pages])
+            self.pool.swap_in(page.page_id)
+            self.swap_in_events += 1
+        page.tokens_used = off + 1
+        return page.hbm_slot, off
+
+    def _ensure_resident(self, req: Request):
+        pages = self.pool.request_pages(req.request_id)
+        needed = [p.page_id for p in pages]
+        for p in pages:
+            if p.hbm_slot is None:
+                self._ensure_free_hbm(1, needed=needed)
+                self.pool.swap_in(p.page_id)
+                self.swap_in_events += 1
+
+    def _ensure_free_hbm(self, n: int, needed: List[int]):
+        while len(self.pool.free_hbm) < n:
+            victim = self._pick_victim(exclude=set(needed))
+            if victim is None:
+                raise MemoryError("no evictable page")
+            self.pool.swap_out(victim)
+
+    def _pick_victim(self, exclude) -> Optional[int]:
+        cands = [p for p in self.pool.pages.values()
+                 if p.hbm_slot is not None and p.page_id not in exclude]
+        if not cands:
+            return None
+        if self.cfg.policy == "gdt" and self.last_recs:
+            # Demote pages the last recommendation wanted slow first.
+            cold = [p for p in cands if not self.last_recs.get(p.page_id,
+                                                               False)]
+            if cold:
+                cands = cold
+        if self.cfg.policy == "fifo":
+            return min(cands, key=lambda p: p.birth_step).page_id
+        # lru (and gdt tie-break): least recently used request first.
+        return min(
+            cands,
+            key=lambda p: self.requests[p.request_id].last_scheduled
+        ).page_id
+
+    # ============================================================ stepping
+    def _decode_one(self, req: Request, token: int) -> int:
+        """Single-request decode (prefill path)."""
+        return self._run_batch([(req, token)])[0]
+
+    def step(self) -> Dict[int, int]:
+        """One engine step: schedule, decode, bookkeeping."""
+        self.step_count += 1
+        active = [r for r in self.requests.values() if r.state == "active"]
+        active.sort(key=lambda r: r.last_scheduled)
+        sched = active[: self.cfg.max_batch]
+        out: Dict[int, int] = {}
+        if sched:
+            pairs = []
+            for r in sched:
+                nxt = (r.generated[-1] if r.generated
+                       else (r.tokens[-1] if r.tokens else 1))
+                pairs.append((r, nxt))
+            toks = self._run_batch(pairs)
+            for r, t in zip(sched, toks):
+                r.generated.append(int(t))
+                out[r.request_id] = int(t)
+                if len(r.generated) >= r.max_new:
+                    r.state = "finished"
+                    for p in self.pool.request_pages(r.request_id):
+                        self.pool.free(p.page_id)
+        if (self.cfg.policy == "gdt"
+                and self.step_count % self.cfg.interval_steps == 0):
+            self._gdt_interval()
+        return out
+
+    def _run_batch(self, pairs) -> List[int]:
+        B = self.cfg.max_batch
+        MP = self.cfg.max_pages_per_seq
+        tokens = np.zeros((B, 1), np.int32)
+        table = np.full((B, MP), -1, np.int32)
+        lengths = np.zeros((B,), np.int32)
+        wslot = np.full((B,), self.scratch_slot, np.int32)
+        woff = np.zeros((B,), np.int32)
+        active = np.zeros((B,), bool)
+        for i, (req, tok) in enumerate(pairs):
+            req.last_scheduled = self.step_count
+            self._ensure_resident(req)
+            slot, off = self._page_for_write(req)
+            req.pos += 1
+            pages = self.pool.request_pages(req.request_id)
+            for p in pages:
+                p.accesses += 1          # exact access model
+                table[i, p.index_in_seq] = p.hbm_slot
+            tokens[i, 0] = tok
+            lengths[i] = req.pos
+            wslot[i] = slot
+            woff[i] = off
+            active[i] = True
+        logits, nk, nv = self._decode(
+            self.params, self.pool.k_hbm, self.pool.v_hbm,
+            jnp.asarray(tokens), jnp.asarray(table), jnp.asarray(lengths),
+            jnp.asarray(wslot), jnp.asarray(woff), jnp.asarray(active))
+        self.pool.k_hbm, self.pool.v_hbm = nk, nv
+        toks = np.asarray(jnp.argmax(logits, axis=-1))
+        return [int(toks[i]) for i in range(len(pairs))]
+
+    # ======================================================= GDT interval
+    def _gdt_interval(self):
+        """The paper's MaybeMigrate over request sites / page chunks."""
+        rows, telemetry = [], {}
+        page_bytes = self.pool.page_bytes
+        for rid, req in self.requests.items():
+            pages = self.pool.request_pages(rid)
+            if not pages:
+                continue
+            accs = sum(p.accesses for p in pages)
+            nbytes = len(pages) * page_bytes
+            fast_b = sum(1 for p in pages if p.hbm_slot is not None)
+            rows.append(ArenaProfile(
+                arena_id=rid, site_id=rid, label=f"req{rid}",
+                accesses=accs, resident_bytes=nbytes,
+                fast_fraction=fast_b / len(pages)))
+            telemetry[rid] = [
+                ChunkStats(chunk_id=p.page_id, nbytes=page_bytes,
+                           accesses=p.accesses,
+                           age=self.step_count - p.birth_step,
+                           fast=p.hbm_slot is not None)
+                for p in pages]
+        if not rows:
+            return
+        profile = IntervalProfile(self.step_count, rows, 0, 0.0)
+        exploded, frags = explode_profile(
+            profile, telemetry, num_fragments=self.cfg.num_fragments)
+        if self.cfg.access_decay < 1.0:   # ReweightProfile (Sec. 4.2)
+            for p_ in self.pool.pages.values():
+                p_.accesses = int(p_.accesses * self.cfg.access_decay)
+        cap = (self.cfg.hbm_pages - 1) * page_bytes   # minus scratch slot
+        recs = recommend(exploded, cap, self.cfg.strategy)
+        decision = decide(exploded, recs, self.hw)
+        self.decisions.append(decision)
+        placement = collapse_to_chunks(frags, recs.fractions)
+        self.last_recs = placement
+        if not decision.migrate:
+            return
+        # Demotions first (free slots), then promotions.
+        for pid, fast in placement.items():
+            if pid in self.pool.pages and not fast and \
+                    self.pool.pages[pid].hbm_slot is not None:
+                self.pool.swap_out(pid)
+        for pid, fast in placement.items():
+            if pid in self.pool.pages and fast and \
+                    self.pool.pages[pid].hbm_slot is None:
+                if self.pool.free_hbm:
+                    self.pool.swap_in(pid)
+
+    # --------------------------------------------------------- telemetry
+    def stats(self) -> Dict[str, float]:
+        return {
+            "steps": self.step_count,
+            "swap_ins": self.pool.swaps_in,
+            "swap_outs": self.pool.swaps_out,
+            "bytes_moved": self.pool.bytes_moved,
+            "hbm_pages_used": self.pool.hbm_used(),
+        }

@@ -1,0 +1,165 @@
+"""Paged KV cache with two memory tiers — the serving-side realization of
+the paper's arenas.
+
+Layout: one global pool of pages per tier; a page holds ``page_size`` tokens
+of K and V for *all* layers: (L, page_size, K, dh).  Pages migrate between
+the HBM pool (memory kind "device") and the host pool ("pinned_host") as
+whole blocks — they are the ``ChunkStats`` chunks the fragmentation engine
+reasons about, and each *request* is an allocation site whose arena is its
+page list.
+
+Attention computes only against the HBM pool; a page on the host tier must
+be swapped in before its sequence can decode (the swap is the rental the
+ski-rental controller weighs).  The engine keeps exact per-page access
+counts — on every decode step the access set is known statically (all pages
+of the scheduled sequences, or the window's pages under SWA).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+HOST_KIND = "pinned_host"
+DEVICE_KIND = "device"
+
+
+@dataclasses.dataclass
+class Page:
+    page_id: int                 # global logical id
+    request_id: int
+    index_in_seq: int            # page number within the sequence
+    birth_step: int
+    hbm_slot: Optional[int]      # slot in HBM pool, None if on host
+    host_slot: Optional[int]
+    accesses: int = 0
+    tokens_used: int = 0
+
+
+class PagedKVPool:
+    """Two-tier physical page pools + logical page bookkeeping."""
+
+    def __init__(self, n_layers: int, page_size: int, kv_heads: int,
+                 head_dim: int, hbm_pages: int, host_pages: int,
+                 dtype=jnp.bfloat16):
+        self.shape = (page_size, kv_heads, head_dim)
+        self.page_size = page_size
+        self.n_layers = n_layers
+        pool = lambda n: jnp.zeros((n_layers, n) + self.shape, dtype)
+        dev = jax.devices()[0]
+        kinds = []
+        try:
+            kinds = [m.kind for m in dev.addressable_memories()]
+        except Exception:
+            pass
+        self._dev_sharding = jax.sharding.SingleDeviceSharding(
+            dev, memory_kind=DEVICE_KIND if DEVICE_KIND in kinds else None)
+        self._host_sharding = (
+            jax.sharding.SingleDeviceSharding(dev, memory_kind=HOST_KIND)
+            if HOST_KIND in kinds else self._dev_sharding)
+        self.k_hbm = jax.device_put(pool(hbm_pages), self._dev_sharding)
+        self.v_hbm = jax.device_put(pool(hbm_pages), self._dev_sharding)
+        self.k_host = jax.device_put(pool(host_pages), self._host_sharding)
+        self.v_host = jax.device_put(pool(host_pages), self._host_sharding)
+
+        self.free_hbm: List[int] = list(range(hbm_pages))
+        self.free_host: List[int] = list(range(host_pages))
+        self.pages: Dict[int, Page] = {}
+        self._next_id = 0
+        self.swaps_in = 0
+        self.swaps_out = 0
+        self.bytes_moved = 0
+
+    # ------------------------------------------------------------ alloc
+    @property
+    def page_bytes(self) -> int:
+        n = self.n_layers
+        for s in self.shape:
+            n *= s
+        return 2 * n * self.k_hbm.dtype.itemsize  # K and V
+
+    def allocate(self, request_id: int, index_in_seq: int,
+                 step: int) -> Page:
+        if not self.free_hbm:
+            raise MemoryError("HBM pool exhausted; evict first")
+        slot = self.free_hbm.pop()
+        page = Page(page_id=self._next_id, request_id=request_id,
+                    index_in_seq=index_in_seq, birth_step=step,
+                    hbm_slot=slot, host_slot=None)
+        self._next_id += 1
+        self.pages[page.page_id] = page
+        return page
+
+    def free(self, page_id: int):
+        page = self.pages.pop(page_id)
+        if page.hbm_slot is not None:
+            self.free_hbm.append(page.hbm_slot)
+        if page.host_slot is not None:
+            self.free_host.append(page.host_slot)
+
+    # ------------------------------------------------------- migrations
+    def _copy_page(self, src_k, src_v, si, dst_k, dst_v, di, dst_sharding):
+        # Memory-kind metadata does not survive eager slicing on the CPU
+        # backend (the slice stays physically host-resident while reporting
+        # "device"), so the cross-tier copy stages through numpy and lands
+        # with an explicit device_put onto the destination tier's sharding.
+        # On TPU this path is a jitted DMA with in/out memory kinds instead.
+        import numpy as np
+
+        ksrc = np.asarray(jax.device_get(
+            jax.lax.dynamic_slice_in_dim(src_k, si, 1, axis=1)))
+        vsrc = np.asarray(jax.device_get(
+            jax.lax.dynamic_slice_in_dim(src_v, si, 1, axis=1)))
+        ksrc = jax.device_put(ksrc, dst_sharding)
+        vsrc = jax.device_put(vsrc, dst_sharding)
+        dst_k = jax.lax.dynamic_update_slice_in_dim(dst_k, ksrc, di, axis=1)
+        dst_v = jax.lax.dynamic_update_slice_in_dim(dst_v, vsrc, di, axis=1)
+        return dst_k, dst_v
+
+    def swap_out(self, page_id: int):
+        """HBM -> host."""
+        page = self.pages[page_id]
+        if page.hbm_slot is None:
+            return
+        if not self.free_host:
+            raise MemoryError("host pool exhausted")
+        di = self.free_host.pop()
+        self.k_host, self.v_host = self._copy_page(
+            self.k_hbm, self.v_hbm, page.hbm_slot,
+            self.k_host, self.v_host, di, self._host_sharding)
+        self.free_hbm.append(page.hbm_slot)
+        page.hbm_slot, page.host_slot = None, di
+        self.swaps_out += 1
+        self.bytes_moved += self.page_bytes
+
+    def swap_in(self, page_id: int):
+        """host -> HBM."""
+        page = self.pages[page_id]
+        if page.hbm_slot is not None:
+            return
+        if not self.free_hbm:
+            raise MemoryError("HBM pool exhausted; evict first")
+        di = self.free_hbm.pop()
+        self.k_hbm, self.v_hbm = self._copy_page(
+            self.k_host, self.v_host, page.host_slot,
+            self.k_hbm, self.v_hbm, di, self._dev_sharding)
+        self.free_host.append(page.host_slot)
+        page.host_slot, page.hbm_slot = None, di
+        self.swaps_in += 1
+        self.bytes_moved += self.page_bytes
+
+    # --------------------------------------------------------- queries
+    def resident(self, page_id: int) -> bool:
+        return self.pages[page_id].hbm_slot is not None
+
+    def hbm_used(self) -> int:
+        return sum(1 for p in self.pages.values() if p.hbm_slot is not None)
+
+    def request_pages(self, request_id: int) -> List[Page]:
+        return sorted(
+            (p for p in self.pages.values() if p.request_id == request_id),
+            key=lambda p: p.index_in_seq)

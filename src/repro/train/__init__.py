@@ -1,0 +1,4 @@
+from .step import StepConfig, make_train_step
+from .trainer import Trainer, TrainerConfig
+
+__all__ = ["StepConfig", "Trainer", "TrainerConfig", "make_train_step"]

@@ -1,0 +1,75 @@
+"""Train-step factory.
+
+``make_train_step(model, opt)`` builds the jit-able
+``step(params, opt_state, batch) -> (params, opt_state, metrics)`` with:
+
+* optional gradient-accumulation over microbatches (scan, so the HLO stays
+  flat in the accumulation factor),
+* optional int8 quantize-dequantize on gradients (the lossy channel of the
+  compressed DP reduction; see dist/compress.py for the wire-level shard_map
+  form),
+* remat already applied inside the model's layer scans.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.compress import quantize_roundtrip
+from ..models.transformer import Model
+from ..optim.adamw import AdamW, AdamWState
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    accum: int = 1                    # gradient accumulation microbatches
+    compression: Optional[str] = None  # None | "int8"
+
+
+def _split_batch(batch: Dict[str, jax.Array], n: int):
+    def resh(x):
+        b = x.shape[0]
+        assert b % n == 0, f"global batch {b} not divisible by accum {n}"
+        return x.reshape((n, b // n) + x.shape[1:])
+
+    return jax.tree.map(resh, batch)
+
+
+def make_train_step(model: Model, opt: AdamW,
+                    cfg: StepConfig = StepConfig()) -> Callable:
+    loss_fn = model.loss
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(params, opt_state: AdamWState, batch):
+        if cfg.accum == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            micro = _split_batch(batch, cfg.accum)
+
+            def body(carry, mb):
+                acc_loss, acc_grads = carry
+                l, g = grads_of(params, mb)
+                return (acc_loss + l,
+                        jax.tree.map(jnp.add, acc_grads, g)), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zeros), micro)
+            loss = loss / cfg.accum
+            grads = jax.tree.map(lambda g: g / cfg.accum, grads)
+
+        if cfg.compression == "int8":
+            grads = jax.tree.map(quantize_roundtrip, grads)
+
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return step

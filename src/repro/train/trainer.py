@@ -1,0 +1,223 @@
+"""Training loop with the paper's online guidance wired in.
+
+The Trainer owns:
+  * the jitted train step (params + optimizer state in HBM kind),
+  * the GDT runtime: every parameter / moment group is an allocation site;
+    the access model charges each group's traffic per step; at the decision
+    interval the OnlineGDT controller may migrate cold groups (in practice:
+    optimizer moments of frozen/slow-moving groups, embedding rows) to the
+    host tier and hot ones back — under an HBM budget,
+  * checkpoint/restart (async) and failure hooks (ft/).
+
+Offload execution model (DESIGN.md Sec. 4): compute always runs on
+device-kind arrays.  Slow-tier groups are fetched before the step and
+written back after — that per-step transfer *is* the rental cost the
+ski-rental controller weighs against migration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    ArenaManager,
+    GDTConfig,
+    HardwareModel,
+    OnlineGDT,
+    SiteKind,
+    SiteRegistry,
+    TPU_V5E,
+)
+from ..core.placement import JaxArenaPlacer
+from ..models.common import is_def
+from ..models.transformer import Model
+from ..optim.adamw import AdamW, AdamWState
+from .step import StepConfig, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0                 # 0 = off
+    ckpt_dir: Optional[str] = None
+    gdt: Optional[GDTConfig] = None     # None = tiering disabled
+    step: StepConfig = dataclasses.field(default_factory=StepConfig)
+
+
+class Trainer:
+    def __init__(self, model: Model, opt: AdamW, cfg: TrainerConfig,
+                 hw: HardwareModel = TPU_V5E, rng: Optional[jax.Array] = None):
+        self.model = model
+        self.opt = opt
+        self.cfg = cfg
+        self.hw = hw
+        key = rng if rng is not None else jax.random.PRNGKey(0)
+        self.params = model.init(key)
+        self.opt_state = opt.init(self.params)
+        self.step_fn = jax.jit(make_train_step(model, opt, cfg.step),
+                               donate_argnums=(0, 1))
+        self.metrics_log: list = []
+
+        # ---- paper integration: sites + arenas + controller ----
+        self.registry = SiteRegistry()
+        gdt_cfg = cfg.gdt if cfg.gdt is not None else GDTConfig(enabled=False)
+        self.arenas = ArenaManager(
+            self.registry,
+            promotion_threshold=gdt_cfg.promotion_threshold,
+            fast_capacity_bytes=(gdt_cfg.fast_capacity_bytes or None)
+            if gdt_cfg.enabled else None,
+        )
+        self.placer = JaxArenaPlacer(self.arenas)
+        self.gdt = OnlineGDT(self.arenas, hw, gdt_cfg, placer=self.placer)
+        self._site_groups: Dict[str, Any] = {}
+        if gdt_cfg.enabled:
+            self._register_state()
+
+    # ------------------------------------------------------------- sites
+    def _group_tree(self, tree, kind: SiteKind, prefix: str):
+        """Register depth-2 groups of a pytree as sites and bind arrays."""
+        leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+        groups: Dict[str, list] = {}
+        for path, leaf in leaves:
+            parts = [prefix] + [
+                str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+            key = "/".join(parts[: self.registry.context_depth])
+            groups.setdefault(key, []).append(("/".join(parts), leaf))
+        for key, entries in groups.items():
+            site = self.registry.register(key.split("/"), kind)
+            nbytes = sum(int(a.size * a.dtype.itemsize) for _, a in entries)
+            arena = self.arenas.allocate(site, nbytes)
+            if arena is not None:
+                for name, a in entries:
+                    self.placer.bind(arena.arena_id, name, a)
+                self._site_groups[key] = (site, arena, [n for n, _ in entries])
+
+    def _register_state(self):
+        self._group_tree(self.params, SiteKind.PARAM, "params")
+        self._group_tree(self.opt_state.m, SiteKind.OPT_STATE, "adam_m")
+        self._group_tree(self.opt_state.v, SiteKind.OPT_STATE, "adam_v")
+
+    def _charge_access_model(self):
+        """Static per-step access model: params read fwd+bwd (+written),
+        moments read+written once (DESIGN.md Sec. 2)."""
+        for key, (site, arena, names) in self._site_groups.items():
+            weight = 3 if site.kind == SiteKind.PARAM else 2
+            self.arenas.touch(site, weight * arena.resident_bytes)
+
+    # -------------------------------------------------------------- loop
+    def run(self, batches: Iterable[Dict[str, jax.Array]]) -> Dict[str, Any]:
+        gdt_on = self.gdt.config.enabled
+        it = iter(batches)
+        t0 = time.perf_counter()
+        for i in range(self.cfg.steps):
+            batch = next(it)
+            if gdt_on:
+                self._sync_state_from_placer()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            if gdt_on:
+                self._sync_state_to_placer()
+                self._charge_access_model()
+                self.gdt.on_step()
+            if self.cfg.log_every and (i + 1) % self.cfg.log_every == 0:
+                self.metrics_log.append(
+                    {k: float(v) for k, v in metrics.items()})
+            if (self.cfg.ckpt_every and self.cfg.ckpt_dir
+                    and (i + 1) % self.cfg.ckpt_every == 0):
+                self.save_checkpoint(int(metrics["step"]))
+        wall = time.perf_counter() - t0
+        out = {"wall_seconds": wall,
+               "final_loss": float(metrics["loss"]),
+               "steps": self.cfg.steps}
+        if gdt_on:
+            out["migrations"] = self.gdt.migration_count
+            out["bytes_migrated"] = self.gdt.total_bytes_migrated
+            out["transfer_bytes"] = self.placer.transfers_bytes
+        return out
+
+    # ------------------------------------------------- placer <-> pytrees
+    def _sync_state_from_placer(self):
+        """Fetch offloaded groups to device kind for the step (the rental)."""
+        trees = {"params": self.params, "adam_m": self.opt_state.m,
+                 "adam_v": self.opt_state.v}
+        updated = {k: dict() for k in trees}
+        for key, (site, arena, names) in self._site_groups.items():
+            fetched = self.placer.fetch_fast(arena.arena_id)
+            prefix = key.split("/")[0]
+            for name, arr in fetched.items():
+                updated[prefix][name] = arr
+        for prefix, tree in trees.items():
+            if updated[prefix]:
+                trees[prefix] = _apply_named(tree, updated[prefix], prefix)
+        self.params = trees["params"]
+        self.opt_state = AdamWState(self.opt_state.step, trees["adam_m"],
+                                    trees["adam_v"])
+
+    def _sync_state_to_placer(self):
+        """Write the step's outputs back into the placer (slow-tier groups
+        are demoted again — the other half of the rental), then point the
+        live pytrees at the placer's canonical arrays so tier state carries
+        to the next step."""
+        trees = {"params": self.params, "adam_m": self.opt_state.m,
+                 "adam_v": self.opt_state.v}
+        stored: Dict[str, Dict[str, jax.Array]] = {k: {} for k in trees}
+        for key, (site, arena, names) in self._site_groups.items():
+            prefix = key.split("/")[0]
+            values = _collect_named(trees[prefix], names, prefix)
+            self.placer.writeback(arena.arena_id, values)
+            for e in self.placer.entries(arena.arena_id):
+                stored[prefix][e.name] = e.array
+        for prefix in trees:
+            if stored[prefix]:
+                trees[prefix] = _apply_named(trees[prefix], stored[prefix],
+                                             prefix)
+        self.params = trees["params"]
+        self.opt_state = AdamWState(self.opt_state.step, trees["adam_m"],
+                                    trees["adam_v"])
+
+    # ------------------------------------------------------- checkpoints
+    def save_checkpoint(self, step: int):
+        from ..ckpt.checkpoint import save
+
+        save(self.cfg.ckpt_dir, step,
+             {"params": self.params, "m": self.opt_state.m,
+              "v": self.opt_state.v,
+              "opt_step": self.opt_state.step})
+
+    def restore_checkpoint(self, step: Optional[int] = None):
+        from ..ckpt.checkpoint import restore
+
+        tree, meta = restore(self.cfg.ckpt_dir, step)
+        self.params = tree["params"]
+        self.opt_state = AdamWState(tree["opt_step"], tree["m"], tree["v"])
+        return meta
+
+
+# --------------------------------------------------------------- helpers
+def _named_leaves(tree, prefix):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = [
+        prefix + "/" + "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in leaves
+    ]
+    return names, [l for _, l in leaves], treedef
+
+
+def _apply_named(tree, updates: Dict[str, jax.Array], prefix: str):
+    names, leaves, treedef = _named_leaves(tree, prefix)
+    new_leaves = [updates.get(n, leaf) for n, leaf in zip(names, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def _collect_named(tree, wanted, prefix: str):
+    names, leaves, _ = _named_leaves(tree, prefix)
+    wanted = set(wanted)
+    return {n: l for n, l in zip(names, leaves) if n in wanted}

@@ -1,0 +1,116 @@
+"""Unit + property tests for the hybrid arena allocation scheme (Sec. 4.1.1)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ArenaManager, SiteKind, SiteRegistry
+
+MB = 2**20
+
+
+def make_mgr(threshold=4 * MB):
+    reg = SiteRegistry()
+    return reg, ArenaManager(reg, promotion_threshold=threshold)
+
+
+def test_small_sites_stay_in_private_pool():
+    reg, mgr = make_mgr()
+    s = reg.register(["layer0", "attn", "wq"], SiteKind.PARAM)
+    assert mgr.allocate(s, 1 * MB) is None
+    assert mgr.allocate(s, 2 * MB) is None
+    assert mgr.private_pool_bytes == 3 * MB
+    assert mgr.arenas() == []
+
+
+def test_promotion_after_threshold():
+    reg, mgr = make_mgr()
+    s = reg.register(["layer0", "mlp", "w1"], SiteKind.PARAM)
+    assert mgr.allocate(s, 3 * MB) is None
+    arena = mgr.allocate(s, 2 * MB)  # cumulative 5 MB > 4 MB threshold
+    assert arena is not None
+    # Already-pooled prefix stays in the pool; new data goes to the arena.
+    assert mgr.private_pool_bytes == 3 * MB
+    assert arena.resident_bytes == 2 * MB
+    # Subsequent allocations land in the shared arena.
+    assert mgr.allocate(s, 1 * MB) is arena
+    assert arena.resident_bytes == 3 * MB
+
+
+def test_large_allocation_promotes_immediately():
+    reg, mgr = make_mgr()
+    s = reg.register(["big"], SiteKind.KV_CACHE)
+    arena = mgr.allocate(s, 100 * MB)
+    assert arena is not None and arena.resident_bytes == 100 * MB
+    assert mgr.private_pool_bytes == 0
+
+
+def test_private_pool_not_profiled():
+    reg, mgr = make_mgr()
+    small = reg.register(["small"], SiteKind.PARAM)
+    big = reg.register(["big"], SiteKind.PARAM)
+    mgr.allocate(small, MB)
+    mgr.allocate(big, 10 * MB)
+    mgr.touch(small, 100)
+    mgr.touch(big, 7)
+    arenas = mgr.arenas()
+    assert len(arenas) == 1
+    assert arenas[0].site is big
+    assert arenas[0].accesses == 7
+
+
+def test_release_accounting():
+    reg, mgr = make_mgr()
+    s = reg.register(["x"], SiteKind.BUFFER)
+    a = mgr.allocate(s, 10 * MB)
+    mgr.release(s, 4 * MB)
+    assert a.resident_bytes == 6 * MB
+    mgr.release(s, 100 * MB)  # clamped
+    assert a.resident_bytes == 0
+
+
+def test_site_registry_context_depth():
+    reg = SiteRegistry(context_depth=3)
+    a = reg.register(["root", "enc", "layer0", "attn", "wq"])
+    b = reg.register(["other", "dec", "layer0", "attn", "wq"])
+    assert a is b  # last 3 components identical -> same site (paper's cloning bound)
+    c = reg.register(["layer1", "attn", "wq"])
+    assert c is not a
+    # Same path, different kind -> different site.
+    d = reg.register(["layer0", "attn", "wq"], SiteKind.OPT_STATE)
+    assert d is not a
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    allocs=st.lists(
+        st.tuples(st.integers(0, 4), st.integers(0, 8 * MB)), min_size=1, max_size=40
+    ),
+    threshold=st.integers(1, 8 * MB),
+)
+def test_byte_conservation_property(allocs, threshold):
+    """Every allocated byte is either in the private pool or a shared arena."""
+    reg = SiteRegistry()
+    mgr = ArenaManager(reg, promotion_threshold=threshold)
+    sites = [reg.register([f"s{i}"]) for i in range(5)]
+    total = 0
+    for idx, nbytes in allocs:
+        mgr.allocate(sites[idx], nbytes)
+        total += nbytes
+    assert mgr.private_pool_bytes + mgr.shared_bytes == total
+    # All-fast default: fast tier bytes == all bytes.
+    assert mgr.fast_tier_bytes() == total
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 16 * MB), min_size=1, max_size=30))
+def test_promotion_threshold_property(sizes):
+    """A site gets a shared arena iff its cumulative bytes exceed the threshold."""
+    threshold = 4 * MB
+    reg, mgr = make_mgr(threshold)
+    s = reg.register(["p"])
+    cum = 0
+    for nbytes in sizes:
+        cum += nbytes
+        arena = mgr.allocate(s, nbytes)
+        assert (arena is not None) == (cum > threshold)

@@ -1,0 +1,95 @@
+"""Tests for beyond-paper age-quantile site fragmentation (Sec. 6.3/7 fix)."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ChunkStats,
+    collapse_to_chunks,
+    explode_profile,
+    fragment_by_age,
+    parent_fractions,
+    recommend,
+)
+from repro.core.profiler import ArenaProfile, IntervalProfile
+
+
+def mkrow(aid, accs, nbytes, frac=1.0):
+    return ArenaProfile(
+        arena_id=aid, site_id=aid, label=f"a{aid}", accesses=accs,
+        resident_bytes=nbytes, fast_fraction=frac,
+    )
+
+
+def test_fragment_by_age_partitions_chunks():
+    chunks = [ChunkStats(chunk_id=i, nbytes=10, accesses=i, age=i) for i in range(10)]
+    frags = fragment_by_age(0, chunks, 4)
+    assert len(frags) == 4
+    seen = sorted(c.chunk_id for f in frags for c in f.chunks)
+    assert seen == list(range(10))
+    # Age ordering: fragment j's max age <= fragment j+1's min age.
+    for a, b in zip(frags, frags[1:]):
+        assert max(c.age for c in a.chunks) <= min(c.age for c in b.chunks)
+
+
+def test_explode_preserves_bytes_and_accesses():
+    prof = IntervalProfile(
+        interval_index=0,
+        rows=[mkrow(0, 1000, 100), mkrow(1, 5, 50)],
+        private_pool_bytes=7,
+        collection_seconds=0.0,
+    )
+    chunks = [ChunkStats(chunk_id=i, nbytes=10, accesses=100, age=i) for i in range(10)]
+    exploded, frags = explode_profile(prof, {0: chunks}, num_fragments=2)
+    assert exploded.total_bytes == prof.total_bytes
+    assert exploded.total_accesses == prof.total_accesses
+    assert len(exploded.rows) == 3  # 2 fragments + untouched arena 1
+    assert exploded.private_pool_bytes == 7
+
+
+def test_qmcpack_pathology_fixed_by_fragmentation():
+    """One dominant site (60% of data), half its pages cold: without
+    fragmentation thermos pins the whole site fast (crowding out other hot
+    sites); with fragmentation the cold half is left on the slow tier."""
+    # Dominant site: 600 bytes, hot pages carry all its accesses.
+    hot_chunks = [ChunkStats(chunk_id=i, nbytes=30, accesses=500, age=0) for i in range(10)]
+    cold_chunks = [ChunkStats(chunk_id=100 + i, nbytes=30, accesses=1, age=9) for i in range(10)]
+    dominant = mkrow(0, sum(c.accesses for c in hot_chunks + cold_chunks), 600)
+    other_hot = mkrow(1, 2000, 300)  # smaller, genuinely hot site
+    prof = IntervalProfile(0, [dominant, other_hot], 0, 0.0)
+    cap = 640
+
+    # Without fragmentation: dominant (density ~8.3) beats other_hot (6.7);
+    # dominant takes 600 of 640, other_hot keeps only 40/300 fast.
+    recs_plain = recommend(prof, cap, "thermos")
+    assert recs_plain.fractions.get(0, 0) == 1.0
+    assert recs_plain.fractions.get(1, 0) < 0.5
+
+    # With fragmentation by age: the cold half of the dominant site loses.
+    exploded, frags = explode_profile(prof, {0: hot_chunks + cold_chunks}, 2)
+    recs_frag = recommend(exploded, cap, "thermos")
+    placement = collapse_to_chunks(frags, recs_frag.fractions)
+    assert all(placement[c.chunk_id] for c in hot_chunks)
+    assert not any(placement[c.chunk_id] for c in cold_chunks)
+    assert recs_frag.fractions.get(1, 0) == 1.0  # other hot site fully fast
+    pf = parent_fractions(frags, placement)
+    assert abs(pf[0] - 0.5) < 1e-6
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    sizes=st.lists(st.integers(1, 1000), min_size=1, max_size=30),
+    k=st.integers(1, 6),
+)
+def test_fragmentation_byte_conservation(sizes, k):
+    chunks = [
+        ChunkStats(chunk_id=i, nbytes=s, accesses=s * 2, age=i % 5)
+        for i, s in enumerate(sizes)
+    ]
+    frags = fragment_by_age(7, chunks, k)
+    assert sum(f.nbytes for f in frags) == sum(sizes)
+    assert sum(len(f.chunks) for f in frags) == len(sizes)
+    # Collapse with full placement keeps everything fast.
+    placement = collapse_to_chunks(frags, {f.fragment_id: 1.0 for f in frags})
+    assert all(placement.values())
+    assert parent_fractions(frags, placement)[7] == 1.0

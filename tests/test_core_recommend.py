@@ -1,0 +1,158 @@
+"""Tests for the MemBrain recommendation engines (Sec. 3.2.1)."""
+
+import itertools
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import IntervalProfile, hotset, knapsack, recommend, thermos
+from repro.core.profiler import ArenaProfile
+
+
+def mkprof(rows):
+    """rows: list of (arena_id, accesses, nbytes[, fast_fraction])."""
+    out = []
+    for r in rows:
+        aid, accs, nbytes = r[0], r[1], r[2]
+        frac = r[3] if len(r) > 3 else 1.0
+        out.append(
+            ArenaProfile(
+                arena_id=aid,
+                site_id=aid,
+                label=f"a{aid}",
+                accesses=accs,
+                resident_bytes=nbytes,
+                fast_fraction=frac,
+            )
+        )
+    return IntervalProfile(
+        interval_index=0, rows=out, private_pool_bytes=0, collection_seconds=0.0
+    )
+
+
+profiles = st.lists(
+    st.tuples(st.integers(0, 10_000), st.integers(0, 1 << 22)),
+    min_size=1,
+    max_size=25,
+).map(lambda rows: mkprof([(i, a, b) for i, (a, b) in enumerate(rows)]))
+
+
+# ------------------------------------------------------------------ invariants
+@settings(max_examples=150, deadline=None)
+@given(prof=profiles, cap=st.integers(0, 1 << 23), strat=st.sampled_from(
+    ["knapsack", "hotset", "thermos"]))
+def test_clipped_assignment_respects_capacity(prof, cap, strat):
+    recs = recommend(prof, cap, strat)
+    fast = recs.fast_bytes(prof.rows)
+    assert fast <= cap
+    for frac in recs.fractions.values():
+        assert 0.0 <= frac <= 1.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(prof=profiles, cap=st.integers(1, 1 << 23))
+def test_hotset_overprescribes_at_most_one_site(prof, cap):
+    recs = hotset(prof, cap)
+    raw_bytes = sum(
+        r.resident_bytes for r in prof.rows if recs.raw.get(r.arena_id, 0) > 0
+    )
+    largest = max((r.resident_bytes for r in prof.rows), default=0)
+    # Hotset stops after the first crossing -> overshoot < largest site.
+    assert raw_bytes <= cap + largest
+
+
+def test_knapsack_optimal_small():
+    """DP matches brute force on small instances."""
+    rows = [(0, 60, 10), (1, 100, 20), (2, 120, 30)]
+    cap = 50
+    prof = mkprof(rows)
+    recs = knapsack(prof, cap)
+    # Brute force.
+    best_val, best_set = -1, set()
+    for mask in itertools.product([0, 1], repeat=3):
+        w = sum(rows[i][2] for i in range(3) if mask[i])
+        v = sum(rows[i][1] for i in range(3) if mask[i])
+        if w <= cap and v > best_val:
+            best_val, best_set = v, {i for i in range(3) if mask[i]}
+    got = {aid for aid, f in recs.raw.items() if f > 0}
+    got_val = sum(rows[i][1] for i in got)
+    assert got_val == best_val == 220  # {1, 2}
+    assert got == best_set
+
+
+def test_knapsack_excludes_huge_hot_site():
+    """Knapsack's documented weakness: a site bigger than capacity is dropped
+    entirely even if it is the hottest (Sec. 3.2.1)."""
+    prof = mkprof([(0, 10_000, 100), (1, 10, 30)])
+    recs = knapsack(prof, 50)
+    assert recs.raw.get(0, 0.0) == 0.0
+    assert recs.raw.get(1, 0.0) == 1.0
+
+
+def test_hotset_selects_by_density_until_cap():
+    prof = mkprof([(0, 100, 10), (1, 90, 10), (2, 1, 10), (3, 80, 10)])
+    recs = hotset(prof, 25)
+    # density order: 0, 1, 3, 2. 10+10 <= 25, adding 3 crosses (30 > 25) and
+    # is included; then loop stops.
+    assert set(recs.raw) == {0, 1, 3}
+
+
+def test_thermos_admits_huge_hot_site_partially():
+    """The hotset/knapsack fix: a huge site hotter than what it displaces gets
+    in (and keeps a portion after clipping)."""
+    prof = mkprof([(0, 50, 40), (1, 10_000, 100)])  # site 1: huge and very hot
+    recs = thermos(prof, 50)
+    assert recs.raw.get(1, 0.0) == 1.0      # admitted despite crossing the cap
+    # After clipping, site 1 keeps a portion; total fits.
+    assert recs.fast_bytes(prof.rows) <= 50
+    assert recs.fractions.get(1, 0.0) > 0.0
+
+
+def test_thermos_rejects_cold_crowding():
+    """A lukewarm big site must NOT displace hotter resident data."""
+    prof = mkprof([(0, 1000, 40), (1, 30, 100)])  # site 1 cold-ish and big
+    recs = thermos(prof, 50)
+    assert recs.raw.get(0, 0.0) == 1.0
+    assert recs.raw.get(1, 0.0) == 0.0      # rejected: would displace hotter bytes
+    # Clipped: site 0 fully fast.
+    assert recs.fractions.get(0, 0.0) == 1.0
+
+
+def test_thermos_skips_then_fills_small_colder_sites():
+    prof = mkprof([(0, 100, 30), (1, 20, 40), (2, 5, 10)])
+    # cap 45: site0 (density 3.33) fits. site1 (density .5) crossing, displaced
+    # value high -> rejected. site2 (density .5) fits free space (15) -> in.
+    recs = thermos(prof, 45)
+    assert recs.raw.get(0) == 1.0
+    assert recs.raw.get(1) is None
+    assert recs.raw.get(2) == 1.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(prof=profiles, cap=st.integers(0, 1 << 23))
+def test_zero_capacity_means_nothing_fast(prof, cap):
+    recs = recommend(prof, 0, "thermos")
+    assert recs.fast_bytes(prof.rows) == 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(prof=profiles, strat=st.sampled_from(["knapsack", "hotset", "thermos"]))
+def test_infinite_capacity_takes_everything_hot(prof, strat):
+    cap = sum(r.resident_bytes for r in prof.rows) + 1
+    recs = recommend(prof, cap, strat)
+    for r in prof.rows:
+        if r.resident_bytes > 0 and r.accesses > 0:
+            assert recs.fractions.get(r.arena_id, 0.0) == 1.0
+
+
+@settings(max_examples=80, deadline=None)
+@given(prof=profiles, cap=st.integers(1, 1 << 23))
+def test_hotset_selection_is_density_prefix(prof, cap):
+    """Hotset selects a prefix of the density-sorted order."""
+    from repro.core.recommend import _sorted_by_density
+
+    recs = hotset(prof, cap)
+    order = [r.arena_id for r in _sorted_by_density(
+        [r for r in prof.rows if r.resident_bytes > 0])]
+    selected = {aid for aid, f in recs.raw.items() if f > 0}
+    assert selected == set(order[: len(selected)])

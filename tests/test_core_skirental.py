@@ -1,0 +1,140 @@
+"""Tests for Algorithm 1's ski-rental break-even rule."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import CLX, decide, get_purchase_cost, get_rental_cost
+from repro.core.profiler import ArenaProfile, IntervalProfile
+from repro.core.recommend import TierAssignment
+
+
+def mkprof(rows):
+    out = [
+        ArenaProfile(
+            arena_id=aid,
+            site_id=aid,
+            label=f"a{aid}",
+            accesses=accs,
+            resident_bytes=nbytes,
+            fast_fraction=frac,
+        )
+        for aid, accs, nbytes, frac in rows
+    ]
+    return IntervalProfile(
+        interval_index=0, rows=out, private_pool_bytes=0, collection_seconds=0.0
+    )
+
+
+def mkrecs(fracs, cap=1 << 40):
+    return TierAssignment(
+        capacity_bytes=cap, fractions=dict(fracs), raw=dict(fracs), strategy="test"
+    )
+
+
+def test_no_change_no_costs():
+    prof = mkprof([(0, 100, 4096, 1.0), (1, 50, 8192, 0.0)])
+    recs = mkrecs({0: 1.0, 1: 0.0})
+    assert get_rental_cost(prof, recs, CLX) == 0.0
+    assert get_purchase_cost(prof, recs, CLX) == 0.0
+    assert not decide(prof, recs, CLX).migrate
+
+
+def test_rental_cost_matches_paper_formula():
+    # Arena 0: slow but recommended fast, 1000 accesses -> a = 1000.
+    # Arena 1: fast but recommended slow, 200 accesses  -> b = 200.
+    prof = mkprof([(0, 1000, 4096, 0.0), (1, 200, 4096, 1.0)])
+    recs = mkrecs({0: 1.0, 1: 0.0})
+    rental = get_rental_cost(prof, recs, CLX)
+    assert rental == (1000 - 200) * CLX.extra_ns_per_slow_access  # (a-b)*300ns
+
+
+def test_rental_zero_when_b_exceeds_a():
+    prof = mkprof([(0, 100, 4096, 0.0), (1, 900, 4096, 1.0)])
+    recs = mkrecs({0: 1.0, 1: 0.0})
+    assert get_rental_cost(prof, recs, CLX) == 0.0
+
+
+def test_purchase_cost_counts_both_directions():
+    prof = mkprof([(0, 0, 8 * 4096, 0.0), (1, 0, 4 * 4096, 1.0)])
+    recs = mkrecs({0: 1.0, 1: 0.0})
+    purchase = get_purchase_cost(prof, recs, CLX)
+    assert purchase == (8 + 4) * CLX.ns_per_page_moved  # 2us per 4KB page
+
+
+def test_breakeven_migrates_only_past_purchase():
+    nbytes = 100 * 4096  # 100 pages -> purchase = 100 * 2000ns = 200us
+    purchase_accs = int(100 * CLX.ns_per_page_moved / CLX.extra_ns_per_slow_access)
+    prof_low = mkprof([(0, purchase_accs, nbytes, 0.0)])
+    prof_high = mkprof([(0, purchase_accs + 1, nbytes, 0.0)])
+    recs = mkrecs({0: 1.0})
+    assert not decide(prof_low, recs, CLX).migrate      # rental == purchase
+    assert decide(prof_high, recs, CLX).migrate         # rental > purchase
+
+
+def test_fractional_residency_scales_costs():
+    prof = mkprof([(0, 1000, 100 * 4096, 0.5)])
+    recs = mkrecs({0: 1.0})
+    # Only half the accesses are currently slow.
+    assert get_rental_cost(prof, recs, CLX) == 500 * CLX.extra_ns_per_slow_access
+    # Only half the pages need to move.
+    assert get_purchase_cost(prof, recs, CLX) == 50 * CLX.ns_per_page_moved
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    rows=st.lists(
+        st.tuples(
+            st.integers(0, 10**6),                       # accesses
+            st.integers(0, 1 << 24),                     # bytes
+            st.floats(0, 1),                             # cur fraction
+            st.floats(0, 1),                             # rec fraction
+        ),
+        min_size=1,
+        max_size=20,
+    )
+)
+def test_cost_nonnegativity_and_consistency(rows):
+    prof = mkprof([(i, a, b, cf) for i, (a, b, cf, _) in enumerate(rows)])
+    recs = mkrecs({i: rf for i, (_, _, _, rf) in enumerate(rows)})
+    rental = get_rental_cost(prof, recs, CLX)
+    purchase = get_purchase_cost(prof, recs, CLX)
+    assert rental >= 0.0 and purchase >= 0.0
+    d = decide(prof, recs, CLX)
+    assert d.migrate == (rental > purchase and d.bytes_to_move > 0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    increments=st.lists(st.integers(0, 5000), min_size=1, max_size=60),
+    pages=st.integers(1, 2000),
+)
+def test_breakeven_competitive_ratio_sequential(increments, pages):
+    """Run the decision interval-by-interval as Algorithm 1 does: accesses
+    accumulate, the arena is bought (migrated) the first time cumulative
+    rental exceeds purchase.  Online cost <= 2*OPT + one interval's rental
+    (the discretization slack)."""
+    nbytes = pages * CLX.page_bytes
+    recs = mkrecs({0: 1.0})
+    cum_accs = 0
+    online_cost = 0.0
+    bought = False
+    purchase0 = None
+    max_increment_cost = 0.0
+    for inc in increments:
+        if bought:
+            break
+        cum_accs += inc
+        max_increment_cost = max(
+            max_increment_cost, inc * CLX.extra_ns_per_slow_access
+        )
+        prof = mkprof([(0, cum_accs, nbytes, 0.0)])
+        d = decide(prof, recs, CLX)
+        purchase0 = d.purchase_cost_ns
+        if d.migrate:
+            online_cost = d.rental_cost_ns + d.purchase_cost_ns
+            bought = True
+    if not bought:
+        online_cost = cum_accs * CLX.extra_ns_per_slow_access
+    total_rental = cum_accs * CLX.extra_ns_per_slow_access
+    opt = min(total_rental, purchase0 if purchase0 is not None else total_rental)
+    assert online_cost <= 2.0 * opt + max_increment_cost + 1e-9

@@ -1,0 +1,133 @@
+"""Integration tests for the OnlineGDT controller loop."""
+
+from repro.core import (
+    ArenaManager,
+    CLX,
+    GDTConfig,
+    OnlineGDT,
+    SiteKind,
+    SiteRegistry,
+)
+
+MB = 2**20
+
+
+def build_runtime(cap_bytes, interval=1, strategy="thermos", first_touch=False):
+    reg = SiteRegistry()
+    mgr = ArenaManager(
+        reg,
+        promotion_threshold=1 * MB,
+        fast_capacity_bytes=cap_bytes if first_touch else None,
+    )
+    gdt = OnlineGDT(
+        mgr,
+        CLX,
+        GDTConfig(
+            strategy=strategy, fast_capacity_bytes=cap_bytes, interval_steps=interval
+        ),
+    )
+    return reg, mgr, gdt
+
+
+def test_interval_gating():
+    reg, mgr, gdt = build_runtime(100 * MB, interval=3)
+    s = reg.register(["x"], SiteKind.PARAM)
+    mgr.allocate(s, 10 * MB)
+    assert gdt.on_step() is None
+    assert gdt.on_step() is None
+    rec = gdt.on_step()
+    assert rec is not None and rec.interval_index == 0
+
+
+def test_hot_arena_migrates_after_breakeven():
+    """A hot arena wrongly placed on the slow tier accumulates rental cost and
+    is eventually promoted — but not on the first interval."""
+    reg, mgr, gdt = build_runtime(100 * MB, interval=1)
+    hot = reg.register(["hot"], SiteKind.PARAM)
+    arena = mgr.allocate(hot, 50 * MB)
+    arena.fast_fraction = 0.0  # start on slow tier
+
+    # Per-interval access increment chosen so break-even needs a few intervals:
+    # purchase = pages(50MB) * 2us = 12800 * 2000ns = 25.6ms
+    # rental per access = 300ns -> need > 85334 accesses cumulative.
+    per_interval = 30_000
+    migrated_at = None
+    for i in range(6):
+        mgr.touch(hot, per_interval)
+        rec = gdt.on_step()
+        if rec.migrated:
+            migrated_at = i
+            break
+    assert migrated_at is not None, "hot arena never promoted"
+    assert migrated_at >= 2, "promoted before rental exceeded purchase"
+    assert arena.fast_fraction == 1.0
+    assert gdt.side_table[arena.arena_id] == 1.0
+
+
+def test_cold_arena_never_migrates():
+    reg, mgr, gdt = build_runtime(100 * MB, interval=1)
+    cold = reg.register(["cold"], SiteKind.PARAM)
+    arena = mgr.allocate(cold, 50 * MB)
+    arena.fast_fraction = 0.0
+    for _ in range(10):
+        mgr.touch(cold, 1)  # nearly idle
+        rec = gdt.on_step()
+        assert not rec.migrated
+    assert arena.fast_fraction == 0.0
+
+
+def test_capacity_pressure_demotes_coldest():
+    """Cold arena first-touches into the fast tier; the hot late-comer spills
+    to slow.  Once rental accumulates, the controller swaps them (demotions
+    first, then promotions — Sec. 4.2 enforcement order)."""
+    reg, mgr, gdt = build_runtime(50 * MB, interval=1, first_touch=True)
+    hot = reg.register(["hot"], SiteKind.PARAM)
+    cold = reg.register(["cold"], SiteKind.PARAM)
+    a_cold = mgr.allocate(cold, 40 * MB)   # arrives first -> all fast
+    a_hot = mgr.allocate(hot, 40 * MB)     # spills: only 10 MB fast
+    assert a_cold.fast_fraction == 1.0
+    assert abs(a_hot.fast_fraction - 0.25) < 1e-6
+    for _ in range(10):
+        mgr.touch(hot, 500_000)
+        mgr.touch(cold, 10)
+        gdt.on_step()
+    assert a_hot.fast_fraction == 1.0
+    assert a_cold.fast_fraction < 0.3
+    # Physical capacity respected after the swap.
+    assert mgr.fast_tier_bytes() <= 50 * MB
+
+
+def test_first_touch_spill_accounting():
+    reg, mgr, gdt = build_runtime(10 * MB, interval=1, first_touch=True)
+    s1 = reg.register(["a"], SiteKind.PARAM)
+    s2 = reg.register(["b"], SiteKind.PARAM)
+    a1 = mgr.allocate(s1, 8 * MB)
+    a2 = mgr.allocate(s2, 8 * MB)
+    assert a1.fast_fraction == 1.0
+    assert abs(a2.fast_fraction - 0.25) < 1e-6  # 2 of 8 MB fit
+    assert mgr.fast_tier_bytes() == 10 * MB
+
+
+def test_disabled_gdt_is_inert():
+    reg = SiteRegistry()
+    mgr = ArenaManager(reg)
+    gdt = OnlineGDT(mgr, CLX, GDTConfig(enabled=False, fast_capacity_bytes=1))
+    s = reg.register(["x"])
+    mgr.allocate(s, 100 * MB)
+    for _ in range(20):
+        assert gdt.on_step() is None
+    assert gdt.history == []
+
+
+def test_telemetry_accumulates():
+    reg, mgr, gdt = build_runtime(100 * MB, interval=1)
+    s = reg.register(["x"], SiteKind.PARAM)
+    arena = mgr.allocate(s, 10 * MB)
+    arena.fast_fraction = 0.0
+    for _ in range(50):
+        mgr.touch(s, 100_000)
+        gdt.on_step()
+    assert gdt.migration_count >= 1
+    assert gdt.total_bytes_migrated >= 10 * MB
+    assert len(gdt.history) == 50
+    assert gdt.profiler.mean_collection_seconds >= 0.0

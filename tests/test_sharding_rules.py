@@ -1,0 +1,112 @@
+"""Property tests for the logical-axis sharding rules — the layer every
+pspec in the system flows through."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (
+    DECODE_RULES,
+    DEFAULT_RULES,
+    FSDP_RULES,
+    MOMENTS_RULES,
+    SP_DECODE_RULES,
+    logical_to_pspec,
+)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# AbstractMesh carries axis names/sizes without devices — exactly what the
+# rule resolver consumes, so property tests don't need fake devices.
+MESH = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+
+LOGICAL = sorted(DEFAULT_RULES)
+RULESETS = {
+    "default": DEFAULT_RULES,
+    "sp": SP_DECODE_RULES,
+    "decode": DECODE_RULES,
+    "moments": MOMENTS_RULES,
+    "fsdp": FSDP_RULES,
+}
+
+
+dims = st.lists(
+    st.tuples(st.sampled_from(LOGICAL + [None]), st.integers(1, 64)),
+    min_size=1, max_size=5,
+)
+
+
+@settings(max_examples=200, deadline=None)
+@given(dims=dims, ruleset=st.sampled_from(sorted(RULESETS)))
+def test_pspec_invariants(dims, ruleset):
+    names = [d[0] for d in dims]
+    sizes = [d[1] for d in dims]
+    spec = logical_to_pspec(names, sizes, MESH, RULESETS[ruleset])
+    assert len(spec) <= len(dims)
+    used = []
+    for entry, size in zip(tuple(spec) + (None,) * (len(dims) - len(spec)),
+                           sizes):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        for a in axes:
+            assert a in MESH.axis_names          # only real mesh axes
+            assert a not in used, "mesh axis reused across dims"
+            used.append(a)
+            total *= MESH.shape[a]
+        assert size % total == 0, "non-divisible dim was sharded"
+
+
+@settings(max_examples=100, deadline=None)
+@given(dims=dims)
+def test_none_names_never_shard(dims):
+    names = [None for _ in dims]
+    sizes = [d[1] for d in dims]
+    spec = logical_to_pspec(names, sizes, MESH, DEFAULT_RULES)
+    assert all(e is None for e in spec)
+
+
+def test_gqa_fallback_behaviour():
+    # kv_heads=8 on a 4-way model axis shards; on 8-way it would replicate.
+    spec = logical_to_pspec(("kv_heads",), (8,), MESH, DEFAULT_RULES)
+    assert spec == P("model")
+    mesh8 = jax.sharding.AbstractMesh((1, 8), ("data", "model"))
+    spec = logical_to_pspec(("kv_heads",), (4,), mesh8, DEFAULT_RULES)
+    assert spec == P(None)   # 4 % 8 != 0 -> replicate
+
+
+def test_batch_spans_pod_and_data_on_multipod():
+    """On the 3-axis mesh the batch dim uses both DP axes; requires 512
+    fake devices, so run in a subprocess."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import jax
+        from repro.dist.sharding import DEFAULT_RULES, logical_to_pspec
+        from repro.launch.mesh import make_production_mesh
+        from jax.sharding import PartitionSpec as P
+
+        mesh = make_production_mesh(multi_pod=True)
+        spec = logical_to_pspec(("batch", "seq"), (256, 4096), mesh,
+                                DEFAULT_RULES)
+        assert spec == P(("pod", "data"), None), spec
+        # and the single-pod mesh drops the pod axis transparently
+        mesh1 = make_production_mesh(multi_pod=False)
+        spec1 = logical_to_pspec(("batch", "seq"), (256, 4096), mesh1,
+                                 DEFAULT_RULES)
+        assert spec1 == P("data", None), spec1
+        print("OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK" in proc.stdout
