@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.core import TPU_V5E
+from repro.launch.analysis import guidance_summary
 from repro.models import build_model
 from repro.serve import Engine, ServeConfig
 
@@ -55,14 +56,17 @@ def session_workload(policy: str, rounds: int = 10):
             if eng.requests[rid].state == "active":
                 eng.pause(rid)
     wall = time.perf_counter() - t0
-    return eng.stats(), wall
+    guidance = (guidance_summary(eng.runtime.events)
+                if eng.runtime is not None else None)
+    return eng.stats(), wall, guidance
 
 
 def run(quick: bool = False):
     rows = []
     pcie = TPU_V5E.slow.read_bw_GBps * 1e9
     for policy in ("gdt", "lru", "fifo"):
-        stats, wall = session_workload(policy, rounds=6 if quick else 10)
+        stats, wall, guidance = session_workload(
+            policy, rounds=6 if quick else 10)
         swap_s = stats["bytes_moved"] / pcie
         rows.append((f"serve/{policy}/swap_bytes", wall * 1e6,
                      stats["bytes_moved"]))
@@ -70,6 +74,13 @@ def run(quick: bool = False):
                      stats["swap_ins"]))
         rows.append((f"serve/{policy}/modeled_swap_seconds", wall * 1e6,
                      swap_s))
+        if guidance is not None:  # the controller's own event stream
+            rows.append((f"serve/{policy}/guided_migrations", wall * 1e6,
+                         guidance["migrations"]))
+            rows.append((f"serve/{policy}/guided_rental_bytes", wall * 1e6,
+                         guidance["rental_bytes"]))
+            rows.append((f"serve/{policy}/dropped_promotions", wall * 1e6,
+                         guidance["dropped_promotions"]))
     return emit(rows)
 
 

@@ -14,8 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_smoke
-from repro.core import GDTConfig
+from repro.core import GuidanceConfig
 from repro.data import SyntheticLM
+from repro.launch.analysis import guidance_summary
 from repro.models import build_model
 from repro.optim import AdamW
 from repro.train import Trainer, TrainerConfig
@@ -45,9 +46,9 @@ def run(quick: bool = False):
                       for a in jax.tree.leaves(tr.params))
     state_bytes += 2 * sum(a.size * a.dtype.itemsize
                            for a in jax.tree.leaves(tr.opt_state.m))
-    gdt = GDTConfig(enabled=True, strategy="thermos",
-                    fast_capacity_bytes=int(state_bytes * 0.6),
-                    interval_steps=5, promotion_threshold=1024)
+    gdt = GuidanceConfig(enabled=True, strategy="thermos",
+                         fast_capacity_bytes=int(state_bytes * 0.6),
+                         interval_steps=5, promotion_threshold=1024)
     t0 = time.perf_counter()
     tr2 = Trainer(model, opt, TrainerConfig(steps=steps, log_every=1,
                                             gdt=gdt),
@@ -58,8 +59,11 @@ def run(quick: bool = False):
     rows.append(("train/gdt_offload/final_loss", gdt_wall * 1e6, gdt_loss))
     rows.append(("train/gdt_offload/loss_delta", gdt_wall * 1e6,
                  abs(gdt_loss - base_loss)))
+    guidance = guidance_summary(tr2.gdt.events)
     rows.append(("train/gdt_offload/bytes_migrated", gdt_wall * 1e6,
-                 tr2.gdt.total_bytes_migrated))
+                 guidance["bytes_migrated"]))
+    rows.append(("train/gdt_offload/migrations", gdt_wall * 1e6,
+                 guidance["migrations"]))
     rows.append(("train/gdt_offload/rental_transfer_bytes", gdt_wall * 1e6,
                  tr2.placer.transfers_bytes))
     rows.append(("train/gdt_offload/slow_tier_bytes", gdt_wall * 1e6,

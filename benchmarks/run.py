@@ -26,6 +26,10 @@ BENCHES = {
     "roofline": "benchmarks.roofline",
 }
 
+# Smallest set that exercises every Algorithm-1 backend (simulator, paged
+# KV serving, trainer arenas) — the CI job that keeps perf scripts alive.
+SMOKE_GROUPS = ("fig7", "serve", "train")
+
 
 def main() -> None:
     parser = argparse.ArgumentParser()
@@ -33,8 +37,15 @@ def main() -> None:
                         help="comma-separated bench group names")
     parser.add_argument("--quick", action="store_true",
                         help="reduced sweeps for CI")
+    parser.add_argument("--smoke", action="store_true",
+                        help="CI smoke: quick mode over one bench per "
+                             "guidance backend")
     args = parser.parse_args()
 
+    if args.smoke:
+        args.quick = True
+        if args.only is None:
+            args.only = ",".join(SMOKE_GROUPS)
     names = list(BENCHES) if args.only is None else args.only.split(",")
     print("name,us_per_call,derived")
     failures = []

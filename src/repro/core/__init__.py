@@ -1,5 +1,12 @@
 """repro.core — the paper's contribution: online application guidance for
-heterogeneous memory, adapted to JAX/TPU (see DESIGN.md)."""
+heterogeneous memory, adapted to JAX/TPU.
+
+The online loop (Algorithm 1) is owned by a single controller,
+``runtime.GuidanceRuntime``, which drives pluggable ``TierBackend``
+implementations — arenas of JAX arrays, paged KV pools, the calibrated
+simulator.  See DESIGN.md at the repository root for the architecture and
+the backend contract.
+"""
 
 from .arenas import Arena, ArenaManager, DEFAULT_PROMOTION_THRESHOLD
 from .fragmentation import (
@@ -13,12 +20,26 @@ from .fragmentation import (
 from .hwmodel import CLX, TPU_V5E, HardwareModel, TierSpec
 from .profiler import ArenaProfile, IntervalProfile, OnlineProfiler
 from .recommend import TierAssignment, hotset, knapsack, recommend, thermos
+from .runtime import (
+    ArenaBackend,
+    FractionPlacer,
+    GuidanceConfig,
+    GuidanceRuntime,
+    IntervalEvent,
+    MigrationPlan,
+    MoveStats,
+    RentalEvent,
+    TierBackend,
+    TierPlacer,
+    static_plan,
+)
 from .sites import Site, SiteKind, SiteRegistry
 from .skirental import MigrationDecision, decide, get_purchase_cost, get_rental_cost
-from .tiering import FractionPlacer, GDTConfig, IntervalRecord, MoveStats, OnlineGDT
+from .tiering import GDTConfig, IntervalRecord, OnlineGDT
 
 __all__ = [
     "Arena",
+    "ArenaBackend",
     "ArenaManager",
     "ArenaProfile",
     "CLX",
@@ -27,18 +48,25 @@ __all__ = [
     "FractionPlacer",
     "Fragment",
     "GDTConfig",
+    "GuidanceConfig",
+    "GuidanceRuntime",
     "HardwareModel",
+    "IntervalEvent",
     "IntervalProfile",
     "IntervalRecord",
     "MigrationDecision",
+    "MigrationPlan",
     "MoveStats",
     "OnlineGDT",
     "OnlineProfiler",
+    "RentalEvent",
     "Site",
     "SiteKind",
     "SiteRegistry",
     "TPU_V5E",
     "TierAssignment",
+    "TierBackend",
+    "TierPlacer",
     "TierSpec",
     "collapse_to_chunks",
     "decide",
@@ -50,5 +78,6 @@ __all__ = [
     "knapsack",
     "parent_fractions",
     "recommend",
+    "static_plan",
     "thermos",
 ]

@@ -26,14 +26,20 @@ from typing import Any, Dict, List, Optional
 import jax
 
 from .arenas import ArenaManager
-from .tiering import FractionPlacer
+from .runtime import FractionPlacer
 
 
 def _with_memory_kind(x: jax.Array, kind: str) -> jax.Array:
     sharding = x.sharding
     if getattr(sharding, "memory_kind", None) == kind:
         return x
-    return jax.device_put(x, sharding.with_memory_kind(kind))
+    try:
+        target = sharding.with_memory_kind(kind)
+    except ValueError:
+        # Backend without this memory kind (e.g. CPU jaxlibs lacking
+        # pinned_host): tier state stays logical, the array stays put.
+        return x
+    return jax.device_put(x, target)
 
 
 def memory_kind_of(x: jax.Array) -> Optional[str]:

@@ -1,169 +1,75 @@
-"""OnlineGDT — the online guided-data-tiering controller (paper Sec. 4.2-4.3).
+"""Deprecated compatibility shim — the Algorithm-1 loop now lives in
+``repro.core.runtime`` (``GuidanceRuntime`` + ``TierBackend``).
 
-Ties together the hybrid arena manager, the online profiler, a recommendation
-strategy, and the ski-rental break-even rule.  The controller is host-side
-Python that runs *between* steps (the analogue of the paper's separate runtime
-thread waking at IntervalTime); enforcement is delegated to a ``TierPlacer``
-so the same controller drives
+``OnlineGDT`` was the original controller class; it survives as a thin
+alias that wires a ``GuidanceRuntime`` to an ``ArenaBackend`` so existing
+examples and callers keep running unchanged:
 
-* the calibrated memory simulator (``mem/``) for the paper-faithful
-  reproduction experiments,
-* real JAX arrays via memory-kind shardings (``placement.JaxArenaPlacer``),
-* the paged KV cache of the serving engine (``serve/kvcache.py``).
+    gdt = OnlineGDT(arenas, hw, GDTConfig(...), placer=...)
+    gdt.on_step()          # same hooks
+    gdt.history            # same telemetry (now IntervalEvent objects)
+
+New code should construct ``GuidanceRuntime`` directly — see DESIGN.md
+("Migrating from OnlineGDT") for the mapping.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional, Protocol
+from typing import Optional
 
 from .arenas import ArenaManager
 from .hwmodel import HardwareModel
-from .profiler import IntervalProfile, OnlineProfiler
-from .recommend import TierAssignment, recommend
-from .skirental import MigrationDecision, decide
+from .runtime import (
+    ArenaBackend,
+    FractionPlacer,
+    GuidanceConfig,
+    GuidanceRuntime,
+    IntervalEvent,
+    MoveStats,
+    TierPlacer,
+)
+
+# Deprecated names, kept importable from their original home.
+GDTConfig = GuidanceConfig
+IntervalRecord = IntervalEvent
+
+__all__ = [
+    "FractionPlacer",
+    "GDTConfig",
+    "IntervalRecord",
+    "MoveStats",
+    "OnlineGDT",
+    "TierPlacer",
+]
 
 
-class TierPlacer(Protocol):
-    """Enforcement backend: remap arenas to match a tier assignment."""
+class OnlineGDT(GuidanceRuntime):
+    """Deprecated: ``GuidanceRuntime`` over an ``ArenaBackend``.
 
-    def enforce(
-        self, profile: IntervalProfile, recs: TierAssignment
-    ) -> "MoveStats":  # pragma: no cover - protocol
-        ...
-
-
-@dataclasses.dataclass
-class MoveStats:
-    bytes_demoted: int = 0   # fast -> slow
-    bytes_promoted: int = 0  # slow -> fast
-
-    @property
-    def bytes_moved(self) -> int:
-        return self.bytes_demoted + self.bytes_promoted
-
-
-@dataclasses.dataclass
-class GDTConfig:
-    strategy: str = "thermos"           # paper default (Sec. 5.3)
-    fast_capacity_bytes: int = 0        # budget for the fast tier
-    interval_steps: int = 10            # decision interval, in runtime steps
-    decay: float = 1.0                  # profile reweighting (1.0 = paper)
-    min_move_bytes: int = 0             # ignore micro-migrations
-    promotion_threshold: int = 4 * 2**20  # hybrid-arena threshold (Sec. 5.3)
-    enabled: bool = True
-
-
-@dataclasses.dataclass
-class IntervalRecord:
-    """Telemetry for one MaybeMigrate invocation (feeds Fig.7-style plots)."""
-
-    interval_index: int
-    decision: MigrationDecision
-    migrated: bool
-    bytes_moved: int
-    fast_bytes_after: int
-    profile_seconds: float
-
-
-class FractionPlacer:
-    """Bookkeeping-only placer: updates arena fast fractions.
-
-    Used by the simulator (which charges migration time itself) and as the
-    base class for real placers.  Enforcement order follows the paper:
-    demotions (fast->slow) first to free space, then promotions.
+    Kept so the original constructor signature — manager, hardware model,
+    config, optional placer — keeps working.  All behaviour (interval
+    gating, ski-rental, enforcement order, telemetry) is the shared
+    ``GuidanceRuntime`` loop.
     """
-
-    def __init__(self, arenas: ArenaManager):
-        self.arenas = arenas
-
-    def _apply(self, arena_id: int, new_fraction: float) -> None:
-        # Subclasses move real data here.
-        pass
-
-    def enforce(self, profile: IntervalProfile, recs: TierAssignment) -> MoveStats:
-        stats = MoveStats()
-        by_id = {a.arena_id: a for a in self.arenas}
-        demotions = []
-        promotions = []
-        for row in profile.rows:
-            arena = by_id.get(row.arena_id)
-            if arena is None:
-                continue
-            target = recs.fast_fraction(row.arena_id)
-            delta = target - arena.fast_fraction
-            moved = abs(int(delta * arena.resident_bytes))
-            if moved == 0:
-                continue
-            (demotions if delta < 0 else promotions).append((arena, target, moved))
-        for arena, target, moved in demotions:     # free space first
-            self._apply(arena.arena_id, target)
-            arena.fast_fraction = target
-            stats.bytes_demoted += moved
-        for arena, target, moved in promotions:
-            self._apply(arena.arena_id, target)
-            arena.fast_fraction = target
-            stats.bytes_promoted += moved
-        return stats
-
-
-class OnlineGDT:
-    """The OnlineGDT loop of Algorithm 1, driven by runtime step hooks."""
 
     def __init__(
         self,
         arenas: ArenaManager,
         hw: HardwareModel,
-        config: GDTConfig,
+        config: GuidanceConfig,
         placer: Optional[TierPlacer] = None,
     ):
-        self.arenas = arenas
-        self.hw = hw
-        self.config = config
-        self.placer: TierPlacer = placer if placer is not None else FractionPlacer(arenas)
-        self.profiler = OnlineProfiler(arenas, hw, decay=config.decay)
-        self.history: List[IntervalRecord] = []
-        self._steps_since_interval = 0
-        self.side_table: Dict[int, float] = {}  # arena_id -> enforced fraction
+        super().__init__(ArenaBackend(arenas, hw, placer=placer), hw, config)
 
-    # ------------------------------------------------------------------ hooks
-    def on_step(self) -> Optional[IntervalRecord]:
-        """Call once per runtime step; fires MaybeMigrate at the interval."""
-        if not self.config.enabled:
-            return None
-        self._steps_since_interval += 1
-        if self._steps_since_interval < self.config.interval_steps:
-            return None
-        self._steps_since_interval = 0
-        return self.maybe_migrate()
-
-    # ------------------------------------------------------------ MaybeMigrate
-    def maybe_migrate(self) -> IntervalRecord:
-        profile = self.profiler.snapshot()
-        recs = recommend(profile, self.config.fast_capacity_bytes, self.config.strategy)
-        decision = decide(profile, recs, self.hw, self.config.min_move_bytes)
-        bytes_moved = 0
-        if decision.migrate:
-            stats = self.placer.enforce(profile, recs)
-            bytes_moved = stats.bytes_moved
-            for arena_id, frac in recs.fractions.items():
-                self.side_table[arena_id] = frac
-        record = IntervalRecord(
-            interval_index=profile.interval_index,
-            decision=decision,
-            migrated=decision.migrate,
-            bytes_moved=bytes_moved,
-            fast_bytes_after=self.arenas.fast_tier_bytes(),
-            profile_seconds=profile.collection_seconds,
-        )
-        self.history.append(record)
-        return record
-
-    # ------------------------------------------------------------- telemetry
+    # Original attribute surface, now delegating to the backend.
     @property
-    def total_bytes_migrated(self) -> int:
-        return sum(r.bytes_moved for r in self.history)
+    def arenas(self) -> ArenaManager:
+        return self.backend.arenas
 
     @property
-    def migration_count(self) -> int:
-        return sum(1 for r in self.history if r.migrated)
+    def placer(self) -> TierPlacer:
+        return self.backend.placer
+
+    @property
+    def profiler(self):
+        return self.backend.profiler

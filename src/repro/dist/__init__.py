@@ -1,0 +1,45 @@
+"""repro.dist — distribution substrate: logical-axis sharding rules,
+gradient compression, and hand-scheduled (overlapped) collectives.
+
+Everything here is CPU-runnable: the sharding resolver works on
+``AbstractMesh`` (no devices needed), compression is plain jnp, and the
+collectives run under ``shard_map`` on fake XLA host devices.
+"""
+
+from .compress import (
+    ErrorFeedback,
+    compress_with_feedback,
+    dequantize,
+    quantize,
+    quantize_roundtrip,
+)
+from .sharding import (
+    DECODE_RULES,
+    DEFAULT_RULES,
+    FSDP_RULES,
+    MOMENTS_RULES,
+    SP_DECODE_RULES,
+    abstract_mesh,
+    batch_pspec,
+    constrain,
+    logical_to_pspec,
+    use_rules,
+)
+
+__all__ = [
+    "DECODE_RULES",
+    "DEFAULT_RULES",
+    "ErrorFeedback",
+    "FSDP_RULES",
+    "MOMENTS_RULES",
+    "SP_DECODE_RULES",
+    "abstract_mesh",
+    "batch_pspec",
+    "compress_with_feedback",
+    "constrain",
+    "dequantize",
+    "logical_to_pspec",
+    "quantize",
+    "quantize_roundtrip",
+    "use_rules",
+]

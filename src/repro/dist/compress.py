@@ -1,0 +1,104 @@
+"""Gradient compression: block-wise symmetric int8 quantization with
+error feedback.
+
+``quantize`` flattens a tensor, pads it to a multiple of ``BLOCK`` elements
+and stores one f32 scale per block (absmax / 127).  The round-trip error is
+therefore bounded by ``0.5 * block_absmax / 127`` per element.  Everything is
+pure ``jnp`` and jit-safe — the train step applies ``quantize_roundtrip`` to
+gradient pytrees inside the compiled step when ``--compression int8`` is on.
+
+``ErrorFeedback`` implements the classic EF-SGD trick: the quantization
+residual is carried to the next step and added back before compressing, so
+the *accumulated* compressed signal is unbiased even though each individual
+quantization is not.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """int8 payload + per-block scales + the original shape/length."""
+
+    q: jax.Array          # (n_blocks, BLOCK) int8
+    scale: jax.Array      # (n_blocks, 1) f32
+    shape: Tuple[int, ...]
+    length: int           # valid elements before padding
+
+    @property
+    def nbytes_compressed(self) -> int:
+        return int(self.q.size + self.scale.size * 4)
+
+
+def _tree_flatten(qt):
+    return (qt.q, qt.scale), (qt.shape, qt.length)
+
+
+def _tree_unflatten(aux, children):
+    q, scale = children
+    shape, length = aux
+    return QuantizedTensor(q=q, scale=scale, shape=shape, length=length)
+
+
+jax.tree_util.register_pytree_node(QuantizedTensor, _tree_flatten, _tree_unflatten)
+
+
+def quantize(x: jax.Array, block: int = BLOCK) -> QuantizedTensor:
+    x = jnp.asarray(x)
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return QuantizedTensor(q=q, scale=scale, shape=tuple(x.shape), length=n)
+
+
+def dequantize(qx: QuantizedTensor) -> jax.Array:
+    flat = (qx.q.astype(jnp.float32) * qx.scale).reshape(-1)
+    return flat[: qx.length].reshape(qx.shape)
+
+
+def quantize_roundtrip(x: jax.Array, block: int = BLOCK) -> jax.Array:
+    """quantize -> dequantize; the lossy identity the train step applies."""
+    return dequantize(quantize(x, block))
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorFeedback:
+    """Carried quantization residual (one per compressed tensor)."""
+
+    residual: jax.Array
+
+    @classmethod
+    def init(cls, x: jax.Array) -> "ErrorFeedback":
+        return cls(residual=jnp.zeros_like(x, dtype=jnp.float32))
+
+
+jax.tree_util.register_pytree_node(
+    ErrorFeedback,
+    lambda ef: ((ef.residual,), None),
+    lambda aux, children: ErrorFeedback(residual=children[0]),
+)
+
+
+def compress_with_feedback(
+    x: jax.Array, ef: ErrorFeedback, block: int = BLOCK
+) -> Tuple[QuantizedTensor, ErrorFeedback]:
+    """Compress ``x + residual``; the new residual is what the quantizer
+    dropped this round."""
+    target = jnp.asarray(x, jnp.float32) + ef.residual
+    qx = quantize(target, block)
+    residual = target - dequantize(qx)
+    return qx, ErrorFeedback(residual=residual)

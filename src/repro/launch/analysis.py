@@ -18,17 +18,50 @@ loop-aware sources:
   are multiplied by the loop's trip count (largest integer constant compared
   against the induction variable in the condition computation; exact for
   every scan/fori the framework emits).
+
+It also hosts ``guidance_summary`` — the consumer of the GuidanceRuntime's
+structured event stream (interval decisions + rental payments), which the
+serving/training benchmarks and reports read instead of poking at
+per-subsystem counters.
 """
 
 from __future__ import annotations
 
 import math
 import re
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Iterable, Optional
 
 import jax
 import numpy as np
 from jax import core as jcore
+
+# ===================================================== guidance telemetry
+def guidance_summary(events: Iterable[Any]) -> Dict[str, float]:
+    """Aggregate a ``GuidanceRuntime`` event stream into report scalars.
+
+    Accepts the runtime's ``events`` list (mixed ``IntervalEvent`` /
+    ``RentalEvent``, discriminated by ``.kind``).  Every consumer — the
+    serving and training benchmarks, launch reports — reads tiering
+    telemetry through this one function.
+    """
+    intervals = [e for e in events if getattr(e, "kind", None) == "interval"]
+    rentals = [e for e in events if getattr(e, "kind", None) == "rental"]
+    migrations = [e for e in intervals if e.migrated]
+    ratios = [e.decision.ratio for e in intervals
+              if e.decision is not None and math.isfinite(e.decision.ratio)]
+    return {
+        "intervals": float(len(intervals)),
+        "migrations": float(len(migrations)),
+        "bytes_migrated": float(sum(e.bytes_moved for e in intervals)),
+        "dropped_promotions": float(
+            sum(e.dropped_promotions for e in intervals)),
+        "rental_events": float(len(rentals)),
+        "rental_bytes": float(sum(e.nbytes for e in rentals)),
+        "mean_decision_ratio": (sum(ratios) / len(ratios)) if ratios else 0.0,
+        "profile_seconds": float(
+            sum(e.profile_seconds for e in intervals)),
+    }
+
 
 # ============================================================ jaxpr costs
 _DTYPE_BYTES = {"pred": 1}

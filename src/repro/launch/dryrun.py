@@ -210,6 +210,8 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis() or {}
+            if isinstance(cost, (list, tuple)):   # older jaxlib: [dict]
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
         rec.update({
             "status": "ok",

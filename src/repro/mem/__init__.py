@@ -5,6 +5,7 @@ from .simulator import (
     GB,
     MemorySimulator,
     PhaseRecord,
+    SimArenaBackend,
     SimResult,
     SimSite,
     SimWorkload,
@@ -15,6 +16,7 @@ __all__ = [
     "GB",
     "MemorySimulator",
     "PhaseRecord",
+    "SimArenaBackend",
     "SimResult",
     "SimSite",
     "SimWorkload",

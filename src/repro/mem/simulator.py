@@ -34,20 +34,18 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence
 
 from ..core import (
+    ArenaBackend,
     ArenaManager,
     ChunkStats,
-    GDTConfig,
+    FractionPlacer,
+    GuidanceConfig,
+    GuidanceRuntime,
     HardwareModel,
-    OnlineGDT,
     SiteKind,
     SiteRegistry,
-    collapse_to_chunks,
-    explode_profile,
-    parent_fractions,
-    recommend,
+    static_plan,
 )
 from ..core.profiler import ArenaProfile, IntervalProfile
-from ..core.tiering import FractionPlacer
 
 GB = float(2**30)
 LINE = 64  # bytes per sampled access (LLC line)
@@ -119,6 +117,57 @@ class SimResult:
 
     def speedup_over(self, other: "SimResult") -> float:
         return self.throughput / other.throughput
+
+
+# ------------------------------------------------------------------ backend
+class SimArenaBackend(ArenaBackend):
+    """``TierBackend`` for the simulator: an ``ArenaBackend`` whose chunk
+    telemetry comes from the workload model's hot/cold page groups.
+
+    Beyond-paper (Sec. 6.3 fix): when ``fragmentation`` is on, every site
+    with intra-site heterogeneity reports two chunks — the young hot page
+    group and the old cold group — so the *core* loop explodes the arena
+    into age fragments and places the groups independently.  The simulator
+    itself no longer carries any Algorithm-1 logic.
+    """
+
+    name = "sim_arena"
+
+    def __init__(self, arenas, hw, placer, workload: SimWorkload,
+                 arena_of: Dict[str, object], fragmentation: bool = False):
+        super().__init__(arenas, hw, placer=placer)
+        self.wl = workload
+        self.arena_of = arena_of          # site name -> Arena (caller-owned)
+        self.fragmentation = fragmentation
+        self._profile: Optional[IntervalProfile] = None
+
+    def snapshot(self) -> IntervalProfile:
+        self._profile = super().snapshot()
+        return self._profile
+
+    def telemetry(self):
+        if not self.fragmentation or self._profile is None:
+            return {}
+        telemetry: Dict[int, List[ChunkStats]] = {}
+        by_arena = self._profile.by_arena()
+        for s in self.wl.sites:
+            arena = self.arena_of.get(s.name)
+            if arena is None or s.hot_page_frac >= 1.0:
+                continue
+            row = by_arena.get(arena.arena_id)
+            if row is None:
+                continue
+            hot_b = int(s.nbytes * s.hot_page_frac)
+            telemetry[arena.arena_id] = [
+                ChunkStats(chunk_id=arena.arena_id * 2, nbytes=hot_b,
+                           accesses=int(row.accesses * s.hot_traffic_frac),
+                           age=0, fast=row.fast_fraction > 0.5),
+                ChunkStats(chunk_id=arena.arena_id * 2 + 1,
+                           nbytes=s.nbytes - hot_b,
+                           accesses=int(row.accesses * (1 - s.hot_traffic_frac)),
+                           age=1, fast=False),
+            ]
+        return telemetry
 
 
 # ----------------------------------------------------------------- simulator
@@ -202,7 +251,7 @@ class MemorySimulator:
     def run_offline(self, cap: int, strategy: str = "thermos") -> SimResult:
         """Offline MemBrain: oracle whole-run profile -> static placement."""
         prof = self._oracle_profile()
-        recs = recommend(prof, cap, strategy)
+        recs = static_plan(prof, cap, strategy)
         id2name = {i: s.name for i, s in enumerate(self.wl.sites)}
         fractions = {
             id2name[aid]: frac for aid, frac in recs.fractions.items()
@@ -267,19 +316,22 @@ class MemorySimulator:
         compute_scale: float = 16.0 / 15.0,
     ) -> SimResult:
         """Online guided data tiering: first-touch start, then Algorithm 1
-        at wall-clock intervals, using the real repro.core controller."""
+        at wall-clock intervals, driven by the shared ``GuidanceRuntime``
+        over a ``SimArenaBackend`` (the same controller that drives the
+        trainer and the serving engine)."""
         reg = SiteRegistry()
         mgr = ArenaManager(reg, fast_capacity_bytes=cap)
-        gdt = OnlineGDT(
-            mgr,
-            self.hw,
-            GDTConfig(strategy=strategy, fast_capacity_bytes=cap,
-                      interval_steps=1),
-            placer=FractionPlacer(mgr),
-        )
         # Register sites; allocation happens at alloc_phase.
         core_sites = {s.name: reg.register([s.name], SiteKind.OTHER) for s in self.wl.sites}
         arena_of: Dict[str, object] = {}
+        backend = SimArenaBackend(mgr, self.hw, FractionPlacer(mgr),
+                                  self.wl, arena_of,
+                                  fragmentation=fragmentation)
+        runtime = GuidanceRuntime(
+            backend, self.hw,
+            GuidanceConfig(strategy=strategy, fast_capacity_bytes=cap,
+                           interval_steps=1,
+                           num_fragments=max(2, num_fragments)))
 
         records: List[PhaseRecord] = []
         total = 0.0
@@ -313,8 +365,7 @@ class MemorySimulator:
             # Decision interval(s) that elapse during this phase.
             if total + wall >= next_decision:
                 next_decision += interval_seconds
-                rec = self._online_decide(gdt, fragmentation, num_fragments,
-                                          arena_of)
+                rec = runtime.on_step()
                 profile_time += profile_cost_per_interval
                 wall += profile_cost_per_interval
                 if rec is not None and rec.migrated:
@@ -328,70 +379,6 @@ class MemorySimulator:
             total += wall
         return SimResult(self.wl.name, f"online_{strategy}", cap, total,
                          records, total_migrated, profile_time)
-
-    def _online_decide(self, gdt: OnlineGDT, fragmentation: bool,
-                       num_fragments: int, arena_of: Dict[str, object]):
-        if not fragmentation:
-            return gdt.on_step()
-        # Beyond-paper: explode big arenas into hot/cold page-group chunks so
-        # the recommender sees intra-site heterogeneity (Sec. 6.3 fix).
-        profile = gdt.profiler.snapshot()
-        telemetry: Dict[int, List[ChunkStats]] = {}
-        name_by_arena = {a.arena_id: a for a in gdt.arenas}
-        for s in self.wl.sites:
-            arena = arena_of.get(s.name)
-            if arena is None or s.hot_page_frac >= 1.0:
-                continue
-            row = profile.by_arena().get(arena.arena_id)
-            if row is None:
-                continue
-            hot_b = int(s.nbytes * s.hot_page_frac)
-            telemetry[arena.arena_id] = [
-                ChunkStats(chunk_id=arena.arena_id * 2, nbytes=hot_b,
-                           accesses=int(row.accesses * s.hot_traffic_frac),
-                           age=0, fast=row.fast_fraction > 0.5),
-                ChunkStats(chunk_id=arena.arena_id * 2 + 1,
-                           nbytes=s.nbytes - hot_b,
-                           accesses=int(row.accesses * (1 - s.hot_traffic_frac)),
-                           age=1, fast=False),
-            ]
-        exploded, frags = explode_profile(profile, telemetry, num_fragments=2)
-        recs = recommend(exploded, gdt.config.fast_capacity_bytes,
-                         gdt.config.strategy)
-        from ..core.skirental import decide as sk_decide
-        decision = sk_decide(exploded, recs, self.hw, gdt.config.min_move_bytes)
-        record = None
-        if decision.migrate:
-            placement = collapse_to_chunks(frags, recs.fractions)
-            pf = parent_fractions(frags, placement)
-            # Apply fragment-derived fractions plus plain fractions for
-            # unfragmented arenas.
-            stats_bytes = 0
-            for arena in gdt.arenas:
-                target = pf.get(arena.arena_id,
-                                recs.fractions.get(arena.arena_id, 0.0))
-                moved = abs(int((target - arena.fast_fraction)
-                                * arena.resident_bytes))
-                arena.fast_fraction = target
-                stats_bytes += moved
-            from ..core.tiering import IntervalRecord
-            record = IntervalRecord(
-                interval_index=profile.interval_index, decision=decision,
-                migrated=True, bytes_moved=stats_bytes,
-                fast_bytes_after=gdt.arenas.fast_tier_bytes(),
-                profile_seconds=profile.collection_seconds,
-            )
-            gdt.history.append(record)
-        else:
-            from ..core.tiering import IntervalRecord
-            record = IntervalRecord(
-                interval_index=profile.interval_index, decision=decision,
-                migrated=False, bytes_moved=0,
-                fast_bytes_after=gdt.arenas.fast_tier_bytes(),
-                profile_seconds=profile.collection_seconds,
-            )
-            gdt.history.append(record)
-        return record
 
     # -- hardware-managed DRAM cache ("memory mode") ---------------------------
     def run_hw_cache(self, cap: int) -> SimResult:

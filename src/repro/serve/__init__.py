@@ -1,4 +1,21 @@
-from .engine import Engine, Request, ServeConfig
+from .engine import Engine, PagedKVBackend, Request, ServeConfig
+from .eviction import (
+    EVICTION_POLICIES,
+    EvictionPolicy,
+    make_eviction_policy,
+    register_eviction_policy,
+)
 from .kvcache import Page, PagedKVPool
 
-__all__ = ["Engine", "Page", "PagedKVPool", "Request", "ServeConfig"]
+__all__ = [
+    "EVICTION_POLICIES",
+    "Engine",
+    "EvictionPolicy",
+    "Page",
+    "PagedKVBackend",
+    "PagedKVPool",
+    "Request",
+    "ServeConfig",
+    "make_eviction_policy",
+    "register_eviction_policy",
+]

@@ -5,34 +5,36 @@ The engine serves dense/MoE decoder models from a paged two-tier KV cache
 chunks.  Every decode step the engine (a) schedules up to ``max_batch``
 active requests, (b) ensures their pages are HBM-resident — swap-ins are the
 rental the controller pays for wrong placement, (c) runs the jitted paged
-decode step, (d) updates exact per-page access counts.  At the decision
-interval the paper's machinery runs end to end: profile -> age-fragmented
-thermos -> ski-rental break-even -> page migrations.
+decode step, (d) updates exact per-page access counts.
 
-Eviction between intervals (when a swap-in needs a free slot) follows the
-last recommendation; pages recommended fast never lose to pages recommended
-slow.  Policies "lru" and "fifo" are selectable baselines for the serving
-benchmark.
+Algorithm 1 itself is NOT implemented here: the engine exposes its page pool
+to the shared controller through ``PagedKVBackend`` (a
+``core.runtime.TierBackend``) and a ``GuidanceRuntime`` drives the paper's
+machinery — profile -> age-fragmented thermos -> ski-rental -> page
+migrations — at the decision interval.
+
+Eviction between intervals (when a swap-in needs a free slot) is a
+first-class policy object (serve/eviction.py): ``gdt`` follows the last
+enforced recommendation; ``lru`` and ``fifo`` are selectable baselines.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Dict, List, Optional
+from typing import Dict, List, Mapping, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import CLX, TPU_V5E, GDTConfig, HardwareModel
-from ..core.fragmentation import ChunkStats, collapse_to_chunks, explode_profile
+from ..core import TPU_V5E, GuidanceConfig, GuidanceRuntime, HardwareModel, MoveStats
+from ..core.fragmentation import ChunkStats
 from ..core.profiler import ArenaProfile, IntervalProfile
-from ..core.recommend import recommend
-from ..core.skirental import decide
+from ..core.runtime import MigrationPlan
 from ..models.layers import lm_head, mlp, rmsnorm, rope
 from ..models.moe import moe
 from ..models.transformer import Model
+from .eviction import make_eviction_policy
 from .kvcache import PagedKVPool
 
 F32 = jnp.float32
@@ -44,7 +46,7 @@ class ServeConfig:
     page_size: int = 16
     hbm_pages: int = 64
     host_pages: int = 256
-    policy: str = "gdt"            # gdt | lru | fifo
+    policy: str = "gdt"            # gdt | lru | fifo (eviction registry)
     interval_steps: int = 16
     strategy: str = "thermos"
     num_fragments: int = 4
@@ -66,6 +68,88 @@ class Request:
     last_scheduled: int = 0
 
 
+class PagedKVBackend:
+    """``TierBackend`` over the engine's paged KV pool.
+
+    Arena = one request's page list; chunk = one page.  ``enforce`` is
+    capacity-safe: the reserved scratch slot never appears in the free list,
+    demotions run first, and promotions that would exceed the free HBM slots
+    are *refused* — and reflected back into ``last_recs`` so the eviction
+    policy sees the placement that actually exists, not the one that was
+    merely planned.
+    """
+
+    name = "paged_kv"
+
+    def __init__(self, pool: PagedKVPool, requests: Dict[int, Request],
+                 clock):
+        self.pool = pool
+        self.requests = requests
+        self.clock = clock
+        self.last_recs: Dict[int, bool] = {}   # page_id -> recommended fast
+        self._telemetry: Dict[int, List[ChunkStats]] = {}
+
+    # ------------------------------------------------------------- protocol
+    def snapshot(self) -> IntervalProfile:
+        rows: List[ArenaProfile] = []
+        telemetry: Dict[int, List[ChunkStats]] = {}
+        page_bytes = self.pool.page_bytes
+        step = self.clock()
+        for rid in self.requests:
+            pages = self.pool.request_pages(rid)
+            if not pages:
+                continue
+            fast_pages = sum(1 for p in pages if p.hbm_slot is not None)
+            rows.append(ArenaProfile(
+                arena_id=rid, site_id=rid, label=f"req{rid}",
+                accesses=sum(p.accesses for p in pages),
+                resident_bytes=len(pages) * page_bytes,
+                fast_fraction=fast_pages / len(pages)))
+            telemetry[rid] = [
+                ChunkStats(chunk_id=p.page_id, nbytes=page_bytes,
+                           accesses=p.accesses,
+                           age=step - p.birth_step,
+                           fast=p.hbm_slot is not None)
+                for p in pages]
+        self._telemetry = telemetry
+        return IntervalProfile(step, rows, 0, 0.0)
+
+    def telemetry(self) -> Mapping[int, Sequence[ChunkStats]]:
+        return self._telemetry
+
+    def reweight(self, decay: float) -> None:
+        for p in self.pool.pages.values():
+            p.accesses = int(p.accesses * decay)
+
+    def on_plan(self, plan: MigrationPlan) -> None:
+        # Track the plan every interval (even when the break-even rule says
+        # "wait") — the guided eviction policy keys off it.
+        self.last_recs = dict(plan.chunk_placement)
+
+    def enforce(self, plan: MigrationPlan) -> MoveStats:
+        stats = MoveStats()
+        pages = self.pool.pages
+        page_bytes = self.pool.page_bytes
+        # Demotions first: free slots for the promotions below.
+        for pid, fast in plan.chunk_placement.items():
+            if not fast and pid in pages and pages[pid].hbm_slot is not None:
+                self.pool.swap_out(pid)
+                stats.bytes_demoted += page_bytes
+        # Promotions, bounded by the actually-free HBM slots.
+        for pid, fast in plan.chunk_placement.items():
+            if fast and pid in pages and pages[pid].hbm_slot is None:
+                if self.pool.free_hbm:
+                    self.pool.swap_in(pid)
+                    stats.bytes_promoted += page_bytes
+                else:
+                    stats.dropped_promotions += 1
+                    self.last_recs[pid] = False
+        return stats
+
+    def fast_bytes(self) -> int:
+        return self.pool.hbm_used() * self.pool.page_bytes
+
+
 class Engine:
     def __init__(self, model: Model, params, cfg: ServeConfig,
                  hw: HardwareModel = TPU_V5E):
@@ -83,13 +167,39 @@ class Engine:
             dtype=mc.dtype)
         self.requests: Dict[int, Request] = {}
         self.step_count = 0
-        self.last_recs: Dict[int, bool] = {}   # page_id -> recommended fast
+        self.eviction = make_eviction_policy(cfg.policy)
         # Reserve one HBM slot as the write target for inactive batch rows,
         # so the batched scatter never collides with a real page.
         self.scratch_slot = self.pool.free_hbm.pop(0)
+        self.kv_backend: Optional[PagedKVBackend] = None
+        self.runtime: Optional[GuidanceRuntime] = None
+        if cfg.policy == "gdt":
+            self.kv_backend = PagedKVBackend(
+                self.pool, self.requests, clock=lambda: self.step_count)
+            self.runtime = GuidanceRuntime(
+                self.kv_backend, hw,
+                GuidanceConfig(
+                    strategy=cfg.strategy,
+                    # The reserved scratch slot is not placeable capacity.
+                    fast_capacity_bytes=(cfg.hbm_pages - 1) * self.pool.page_bytes,
+                    interval_steps=cfg.interval_steps,
+                    decay=cfg.access_decay,
+                    num_fragments=cfg.num_fragments,
+                    skip_empty_intervals=True),
+                clock=lambda: self.step_count)
         self._decode = jax.jit(self._build_decode())
         self.swap_in_events = 0
-        self.decisions = []
+
+    # ------------------------------------------------- telemetry shims
+    @property
+    def decisions(self):
+        """Deprecated: ski-rental decisions now live on the runtime's
+        event stream (``engine.runtime.events``)."""
+        return self.runtime.decisions if self.runtime is not None else []
+
+    @property
+    def last_recs(self) -> Dict[int, bool]:
+        return self.kv_backend.last_recs if self.kv_backend is not None else {}
 
     # ========================================================= jit decode
     def _build_decode(self):
@@ -164,6 +274,12 @@ class Engine:
             req.state = "active"
 
     # ------------------------------------------------------- page mgmt
+    def _note_swap_in(self):
+        """A demand swap-in is a rental payment; log it on the stream."""
+        self.swap_in_events += 1
+        if self.runtime is not None:
+            self.runtime.record_rental(self.pool.page_bytes, source="swap_in")
+
     def _page_for_write(self, req: Request) -> tuple:
         """(hbm_slot, offset) for the next token; allocates as needed."""
         idx, off = divmod(req.pos, self.cfg.page_size)
@@ -177,7 +293,7 @@ class Engine:
             self._ensure_free_hbm(
                 1, needed=[p.page_id for p in pages])
             self.pool.swap_in(page.page_id)
-            self.swap_in_events += 1
+            self._note_swap_in()
         page.tokens_used = off + 1
         return page.hbm_slot, off
 
@@ -188,7 +304,7 @@ class Engine:
             if p.hbm_slot is None:
                 self._ensure_free_hbm(1, needed=needed)
                 self.pool.swap_in(p.page_id)
-                self.swap_in_events += 1
+                self._note_swap_in()
 
     def _ensure_free_hbm(self, n: int, needed: List[int]):
         while len(self.pool.free_hbm) < n:
@@ -200,21 +316,7 @@ class Engine:
     def _pick_victim(self, exclude) -> Optional[int]:
         cands = [p for p in self.pool.pages.values()
                  if p.hbm_slot is not None and p.page_id not in exclude]
-        if not cands:
-            return None
-        if self.cfg.policy == "gdt" and self.last_recs:
-            # Demote pages the last recommendation wanted slow first.
-            cold = [p for p in cands if not self.last_recs.get(p.page_id,
-                                                               False)]
-            if cold:
-                cands = cold
-        if self.cfg.policy == "fifo":
-            return min(cands, key=lambda p: p.birth_step).page_id
-        # lru (and gdt tie-break): least recently used request first.
-        return min(
-            cands,
-            key=lambda p: self.requests[p.request_id].last_scheduled
-        ).page_id
+        return self.eviction.pick(cands, self)
 
     # ============================================================ stepping
     def _decode_one(self, req: Request, token: int) -> int:
@@ -242,9 +344,8 @@ class Engine:
                     r.state = "finished"
                     for p in self.pool.request_pages(r.request_id):
                         self.pool.free(p.page_id)
-        if (self.cfg.policy == "gdt"
-                and self.step_count % self.cfg.interval_steps == 0):
-            self._gdt_interval()
+        if self.runtime is not None:
+            self.runtime.on_step()        # MaybeMigrate at the interval
         return out
 
     def _run_batch(self, pairs) -> List[int]:
@@ -277,55 +378,6 @@ class Engine:
         self.pool.k_hbm, self.pool.v_hbm = nk, nv
         toks = np.asarray(jnp.argmax(logits, axis=-1))
         return [int(toks[i]) for i in range(len(pairs))]
-
-    # ======================================================= GDT interval
-    def _gdt_interval(self):
-        """The paper's MaybeMigrate over request sites / page chunks."""
-        rows, telemetry = [], {}
-        page_bytes = self.pool.page_bytes
-        for rid, req in self.requests.items():
-            pages = self.pool.request_pages(rid)
-            if not pages:
-                continue
-            accs = sum(p.accesses for p in pages)
-            nbytes = len(pages) * page_bytes
-            fast_b = sum(1 for p in pages if p.hbm_slot is not None)
-            rows.append(ArenaProfile(
-                arena_id=rid, site_id=rid, label=f"req{rid}",
-                accesses=accs, resident_bytes=nbytes,
-                fast_fraction=fast_b / len(pages)))
-            telemetry[rid] = [
-                ChunkStats(chunk_id=p.page_id, nbytes=page_bytes,
-                           accesses=p.accesses,
-                           age=self.step_count - p.birth_step,
-                           fast=p.hbm_slot is not None)
-                for p in pages]
-        if not rows:
-            return
-        profile = IntervalProfile(self.step_count, rows, 0, 0.0)
-        exploded, frags = explode_profile(
-            profile, telemetry, num_fragments=self.cfg.num_fragments)
-        if self.cfg.access_decay < 1.0:   # ReweightProfile (Sec. 4.2)
-            for p_ in self.pool.pages.values():
-                p_.accesses = int(p_.accesses * self.cfg.access_decay)
-        cap = (self.cfg.hbm_pages - 1) * page_bytes   # minus scratch slot
-        recs = recommend(exploded, cap, self.cfg.strategy)
-        decision = decide(exploded, recs, self.hw)
-        self.decisions.append(decision)
-        placement = collapse_to_chunks(frags, recs.fractions)
-        self.last_recs = placement
-        if not decision.migrate:
-            return
-        # Demotions first (free slots), then promotions.
-        for pid, fast in placement.items():
-            if pid in self.pool.pages and not fast and \
-                    self.pool.pages[pid].hbm_slot is not None:
-                self.pool.swap_out(pid)
-        for pid, fast in placement.items():
-            if pid in self.pool.pages and fast and \
-                    self.pool.pages[pid].hbm_slot is None:
-                if self.pool.free_hbm:
-                    self.pool.swap_in(pid)
 
     # --------------------------------------------------------- telemetry
     def stats(self) -> Dict[str, float]:

@@ -2,11 +2,12 @@
 
 The Trainer owns:
   * the jitted train step (params + optimizer state in HBM kind),
-  * the GDT runtime: every parameter / moment group is an allocation site;
-    the access model charges each group's traffic per step; at the decision
-    interval the OnlineGDT controller may migrate cold groups (in practice:
-    optimizer moments of frozen/slow-moving groups, embedding rows) to the
-    host tier and hot ones back — under an HBM budget,
+  * the guidance runtime: every parameter / moment group is an allocation
+    site; the access model charges each group's traffic per step; at the
+    decision interval the shared ``GuidanceRuntime`` (over an
+    ``ArenaBackend``) may migrate cold groups (in practice: optimizer
+    moments of frozen/slow-moving groups, embedding rows) to the host tier
+    and hot ones back — under an HBM budget,
   * checkpoint/restart (async) and failure hooks (ft/).
 
 Offload execution model (DESIGN.md Sec. 4): compute always runs on
@@ -26,10 +27,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import (
+    ArenaBackend,
     ArenaManager,
-    GDTConfig,
+    GuidanceConfig,
+    GuidanceRuntime,
     HardwareModel,
-    OnlineGDT,
     SiteKind,
     SiteRegistry,
     TPU_V5E,
@@ -47,7 +49,7 @@ class TrainerConfig:
     log_every: int = 10
     ckpt_every: int = 0                 # 0 = off
     ckpt_dir: Optional[str] = None
-    gdt: Optional[GDTConfig] = None     # None = tiering disabled
+    gdt: Optional[GuidanceConfig] = None  # None = tiering disabled
     step: StepConfig = dataclasses.field(default_factory=StepConfig)
 
 
@@ -67,7 +69,7 @@ class Trainer:
 
         # ---- paper integration: sites + arenas + controller ----
         self.registry = SiteRegistry()
-        gdt_cfg = cfg.gdt if cfg.gdt is not None else GDTConfig(enabled=False)
+        gdt_cfg = cfg.gdt if cfg.gdt is not None else GuidanceConfig(enabled=False)
         self.arenas = ArenaManager(
             self.registry,
             promotion_threshold=gdt_cfg.promotion_threshold,
@@ -75,7 +77,11 @@ class Trainer:
             if gdt_cfg.enabled else None,
         )
         self.placer = JaxArenaPlacer(self.arenas)
-        self.gdt = OnlineGDT(self.arenas, hw, gdt_cfg, placer=self.placer)
+        # The shared Algorithm-1 controller over the real-array backend;
+        # ``self.gdt`` keeps its historical name (it IS the runtime).
+        self.gdt = GuidanceRuntime(
+            ArenaBackend(self.arenas, hw, placer=self.placer), hw, gdt_cfg)
+        self.runtime = self.gdt
         self._site_groups: Dict[str, Any] = {}
         if gdt_cfg.enabled:
             self._register_state()

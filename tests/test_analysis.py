@@ -115,8 +115,8 @@ def _collect(devices, body):
 def test_while_loop_collectives_expand_by_trip_count():
     out = _collect(8, """
         from repro.launch.analysis import collective_bytes
-        mesh = jax.make_mesh((8,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((8,), ("model",))
         L = 7
         def f(x, ws):
             def body(x, w):
@@ -148,8 +148,8 @@ def test_while_loop_collectives_expand_by_trip_count():
 def test_direct_collectives_counted_once():
     out = _collect(8, """
         from repro.launch.analysis import collective_bytes
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import compat_make_mesh
+        mesh = compat_make_mesh((8,), ("d",))
         def f(x):
             return jax.lax.with_sharding_constraint(
                 x.sum(axis=0, keepdims=True) + x, NamedSharding(mesh, P()))

@@ -1,6 +1,9 @@
 """Unit + property tests for the hybrid arena allocation scheme (Sec. 4.1.1)."""
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

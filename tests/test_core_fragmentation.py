@@ -1,5 +1,9 @@
 """Tests for beyond-paper age-quantile site fragmentation (Sec. 6.3/7 fix)."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

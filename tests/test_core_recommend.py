@@ -2,6 +2,10 @@
 
 import itertools
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -1,5 +1,9 @@
 """Tests for Algorithm 1's ski-rental break-even rule."""
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

@@ -38,7 +38,7 @@ def test_ring_allgather_matmul_matches_reference():
         from jax.sharding import PartitionSpec as P
         from repro.launch.mesh import make_test_mesh
         from repro.dist.collectives import (
-            ring_allgather_matmul, allgather_matmul_reference,
+            shard_map, ring_allgather_matmul, allgather_matmul_reference,
             ring_matmul_reducescatter, matmul_reducescatter_reference)
 
         mesh = make_test_mesh(data=1, model=8)
@@ -51,7 +51,7 @@ def test_ring_allgather_matmul_matches_reference():
             b = allgather_matmul_reference(x_shard, w_col, "model")
             return a, b
 
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(shard_map(
             both, mesh=mesh,
             in_specs=(P("model", None), P(None, "model")),
             out_specs=(P(None, "model"), P(None, "model"))))
@@ -67,7 +67,7 @@ def test_ring_allgather_matmul_matches_reference():
             return a, b
 
         h = jax.random.normal(jax.random.PRNGKey(3), (64, 48), jnp.float32)
-        g = jax.jit(jax.shard_map(
+        g = jax.jit(shard_map(
             both2, mesh=mesh,
             in_specs=(P(None, "model"), P("model", None)),
             out_specs=(P("model", None), P("model", None))))
@@ -121,6 +121,11 @@ def test_overlap_replaces_allgather_with_permutes():
     """)
 
 
+from conftest import has_host_memory
+
+
+@pytest.mark.skipif(not has_host_memory(),
+                    reason="backend lacks pinned_host memory kind")
 def test_gdt_placement_on_sharded_params():
     """Tier migration composes with mesh sharding: a sharded array keeps its
     PartitionSpec across a host-tier roundtrip."""

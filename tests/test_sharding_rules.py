@@ -9,6 +9,9 @@ import textwrap
 import jax
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 from jax.sharding import PartitionSpec as P
@@ -19,12 +22,13 @@ from repro.dist.sharding import (
     FSDP_RULES,
     MOMENTS_RULES,
     SP_DECODE_RULES,
+    abstract_mesh,
     logical_to_pspec,
 )
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # AbstractMesh carries axis names/sizes without devices — exactly what the
 # rule resolver consumes, so property tests don't need fake devices.
-MESH = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+MESH = abstract_mesh((2, 4), ("data", "model"))
 
 LOGICAL = sorted(DEFAULT_RULES)
 RULESETS = {
@@ -77,7 +81,7 @@ def test_gqa_fallback_behaviour():
     # kv_heads=8 on a 4-way model axis shards; on 8-way it would replicate.
     spec = logical_to_pspec(("kv_heads",), (8,), MESH, DEFAULT_RULES)
     assert spec == P("model")
-    mesh8 = jax.sharding.AbstractMesh((1, 8), ("data", "model"))
+    mesh8 = abstract_mesh((1, 8), ("data", "model"))
     spec = logical_to_pspec(("kv_heads",), (4,), mesh8, DEFAULT_RULES)
     assert spec == P(None)   # 4 % 8 != 0 -> replicate
 

@@ -11,6 +11,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke
 from repro.core import CLX, GDTConfig
@@ -38,6 +39,11 @@ def test_paper_pipeline_end_to_end_on_simulator():
     assert online.bytes_migrated > 0
 
 
+from conftest import has_host_memory
+
+
+@pytest.mark.skipif(not has_host_memory(),
+                    reason="backend lacks pinned_host memory kind")
 def test_training_with_guidance_is_lossless_and_offloads():
     cfg = dataclasses.replace(get_smoke("llama3_2_1b"), remat=False)
     model = build_model(cfg)
