@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.moe_gemm import moe_grouped_ffn_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -75,6 +76,27 @@ def run(quick: bool = False):
     err = float(jnp.abs(got - want).max())
     rows.append(("kernels/ssd_scan/oracle", us_ref, 0.0))
     rows.append(("kernels/ssd_scan/pallas_interpret", us_pal, err))
+
+    # grouped-expert GEMM (dropless MoE dispatch): ragged per-expert
+    # segments with an empty group, tile-straddling boundaries included.
+    E, d, f = (4, 64, 128) if quick else (8, 128, 512)
+    sizes = rng.integers(0, 96, E)
+    sizes[0] = 0
+    sizes[-1] = max(int(sizes[-1]), 1)
+    T = int(sizes.sum())
+    gs = jnp.asarray(sizes, jnp.int32)
+    xg = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(E, d, f)) * 0.1, jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(E, d, f)) * 0.1, jnp.float32)
+    wd = jnp.asarray(rng.normal(size=(E, f, d)) * 0.1, jnp.float32)
+    want, us_ref = _time(ref.moe_grouped_ffn_reference, xg, wg, wu, wd, gs)
+    got, us_pal = _time(
+        lambda *a: moe_grouped_ffn_pallas(*a, block_t=64, block_f=128,
+                                          interpret=True),
+        xg, wg, wu, wd, gs)
+    err = float(jnp.abs(got - want).max())
+    rows.append(("kernels/moe_grouped_gemm/oracle", us_ref, 0.0))
+    rows.append(("kernels/moe_grouped_gemm/pallas_interpret", us_pal, err))
     return emit(rows)
 
 

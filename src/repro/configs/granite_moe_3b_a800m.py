@@ -21,6 +21,10 @@ CONFIG = ModelConfig(
     vocab=49155,
     n_experts=40,
     top_k=8,
+    # Dropless dispatch (top-8 over 40 experts overflows capacity buffers
+    # easily; sorted ragged routing drops nothing).  Padded-EP mode falls
+    # back to the capacity path until its all-to-alls are ported.
+    moe_dispatch="dropless",
     head_dim=64,
 )
 

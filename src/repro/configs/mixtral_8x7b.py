@@ -19,6 +19,9 @@ CONFIG = ModelConfig(
     vocab=32000,
     n_experts=8,
     top_k=2,
+    # Dropless sorted-ragged dispatch: prefill and decode route identically,
+    # which ring-KV serving correctness depends on (tests/test_ring_kv.py).
+    moe_dispatch="dropless",
     window=4096,
 )
 

@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the serving/training hot spots, each with a
+# pure-jnp oracle in ref.py and backend dispatch in ops.py:
+#   flash_attention.py — blockwise online-softmax attention (GQA/SWA)
+#   paged_attention.py — decode attention over the paged two-tier KV pool
+#   ssd_scan.py        — intra-chunk SSD (Mamba2) block
+#   moe_gemm.py        — grouped-expert SwiGLU GEMM over sorted ragged
+#                        segments (dropless MoE dispatch)

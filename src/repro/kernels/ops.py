@@ -58,6 +58,19 @@ def paged_attention(q, k_pool, v_pool, page_table, lengths,
                                   interpret=(mode == "interpret"))
 
 
+def moe_grouped_ffn(x, w_gate, w_up, w_down, group_sizes):
+    """Grouped-expert SwiGLU over sorted ragged segments (dropless MoE
+    dispatch).  x: (T, d) argsorted by expert; group_sizes: (E,) int32."""
+    mode = current_mode()
+    if mode == "reference":
+        return ref.moe_grouped_ffn_reference(x, w_gate, w_up, w_down,
+                                             group_sizes)
+    from .moe_gemm import moe_grouped_ffn_pallas
+
+    return moe_grouped_ffn_pallas(x, w_gate, w_up, w_down, group_sizes,
+                                  interpret=(mode == "interpret"))
+
+
 def ssd_scan(x, dt, A, Bm, Cm):
     """Intra-chunk SSD block (one chunk).  Cross-chunk recurrence stays in
     models/ssm.py regardless of backend."""

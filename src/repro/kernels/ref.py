@@ -74,6 +74,33 @@ def paged_attention_reference(q, k_pool, v_pool, page_table, lengths,
     return o.reshape(B, H, dh).astype(q.dtype)
 
 
+# ---------------------------------------------------- grouped-expert GEMM
+def moe_grouped_ffn_reference(x, w_gate, w_up, w_down, group_sizes):
+    """Grouped-expert SwiGLU over sorted ragged segments — jnp oracle.
+
+    x: (T, d) tokens sorted by expert id (contiguous per-expert segments);
+    w_gate/w_up: (E, d, f); w_down: (E, f, d);
+    group_sizes: (E,) int32 summing to T (empty groups allowed).
+
+    Every expert's FFN is applied densely to all T rows, and the final
+    einsum against the segment one-hot performs the segment-select (a
+    segment_sum over the expert axis).  O(E) times the flops of the ragged
+    kernel — it's the correctness oracle and the non-TPU lowering, where
+    smoke-scale shapes make the overhead irrelevant.
+    """
+    T, d = x.shape
+    E = w_gate.shape[0]
+    seg = jnp.repeat(jnp.arange(E), group_sizes, total_repeat_length=T)
+    xf = x.astype(F32)
+    g = jnp.einsum("td,edf->etf", xf, w_gate.astype(F32))
+    u = jnp.einsum("td,edf->etf", xf, w_up.astype(F32))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("etf,efd->etd", h, w_down.astype(F32))       # (E, T, d)
+    sel = jax.nn.one_hot(seg, E, dtype=F32)                     # (T, E)
+    out = jnp.einsum("etd,te->td", y, sel)
+    return out.astype(x.dtype)
+
+
 # ------------------------------------------------------------- SSD scan
 def ssd_reference(x, dt, A, Bm, Cm) -> jax.Array:
     """Naive O(S^2) SSD (Mamba2) reference.

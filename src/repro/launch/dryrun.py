@@ -1,15 +1,12 @@
-import os
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=512 "
-    + os.environ.get("XLA_FLAGS", ""))
-
 """Multi-pod dry run: AOT-lower and compile every (architecture x input
 shape) cell on the production meshes, prove per-device memory fits, and
 extract the roofline inputs (FLOPs, bytes, collective traffic).
 
-MUST be run as a module entry point (the XLA_FLAGS line above runs before
+MUST be run as a module entry point (the XLA_FLAGS block below runs before
 any jax import — importing this module from an already-initialized process
-will not get 512 devices).
+will not get 512 devices; library importers, e.g. the test suite's
+trace-only artifact fixture, must not have a 512-device XLA_FLAGS leaked
+into os.environ where sibling subprocess-based tests would inherit it).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun                  # everything
@@ -17,6 +14,13 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_2_1b --shape train_4k
 Results land in results/dryrun/<mesh>/<arch>__<shape>.json (incremental).
 """
+
+import os
+
+if __name__ == "__main__":
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
 import json
@@ -187,7 +191,12 @@ def build_cell(arch: str, shape_name: str, mesh, quick_layers: int = 0,
 def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
              outdir: str, quick_layers: int = 0,
              keep_hlo: bool = False, profile: str = "tp",
-             moments: str = "zero1", remat: bool = True) -> Dict[str, Any]:
+             moments: str = "zero1", remat: bool = True,
+             trace_only: bool = False) -> Dict[str, Any]:
+    """``trace_only`` stops after the jaxpr: exact loop-aware ``global_cost``
+    without lowering/compiling on the production mesh.  FLOPs/bytes in the
+    jaxpr are mesh-independent, so a 1x1 mesh suffices — this is how the
+    test suite regenerates cost artifacts without 256 host devices."""
     os.makedirs(outdir, exist_ok=True)
     out_path = os.path.join(outdir, f"{arch}__{shape_name}.json")
     rec: Dict[str, Any] = {
@@ -203,6 +212,16 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
         with use_rules(rules), mesh:
             jaxpr = jax.make_jaxpr(fn)(*args)
             global_cost = jaxpr_cost(jaxpr)
+            if trace_only:
+                rec.update({
+                    "status": "ok",
+                    "trace_only": True,
+                    "global_cost": global_cost,
+                })
+                rec["wall_seconds"] = round(time.time() - t0, 2)
+                with open(out_path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                return rec
             lowered = jax.jit(fn, in_shardings=in_sh,
                               out_shardings=out_sh).lower(*args)
             t_lower = time.time() - t0

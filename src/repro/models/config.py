@@ -26,7 +26,8 @@ class ModelConfig:
     n_experts: int = 0
     top_k: int = 0
     moe_parallelism: str = "tp"           # "tp" | "ep"
-    capacity_factor: float = 1.0
+    moe_dispatch: str = "dropless"        # "dropless" | "capacity"
+    capacity_factor: float = 1.0          # capacity path only
     # SSM / hybrid
     ssm_state: int = 0
     ssm_expand: int = 2
@@ -55,6 +56,8 @@ class ModelConfig:
         assert self.n_heads % max(self.kv_heads, 1) == 0, "GQA grouping"
         if self.family == "moe":
             assert self.n_experts > 0 and self.top_k > 0
+            assert self.moe_dispatch in ("dropless", "capacity"), \
+                self.moe_dispatch
         if self.family == "hybrid":
             assert self.ssm_state > 0 and self.attn_every > 0
         if self.family == "encdec":

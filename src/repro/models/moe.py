@@ -1,8 +1,19 @@
 """Mixture-of-Experts layer (Mixtral / granite-MoE style).
 
-Top-k routing with capacity-bounded scatter dispatch (tokens over capacity
-are dropped, GShard-style) — no (B,S,E,C) one-hot tensors, so the dispatch
-buffers stay O(E*C*d).
+Two dispatch modes (``MoEConfig.dispatch``):
+
+* ``dropless`` (default): sorted ragged routing.  Tokens are argsorted by
+  expert id into contiguous per-expert segments and the expert SwiGLU runs
+  as a grouped GEMM over the ragged segments (``kernels/moe_gemm.py`` on
+  TPU, a masked-einsum oracle elsewhere).  No token is ever dropped, so the
+  layer computes the *same function* for batched prefill, chunked prefill
+  and single-token decode — routing is per-token and chunking-invariant.
+
+* ``capacity``: GShard-style capacity-bounded scatter dispatch (tokens over
+  capacity are dropped).  Retained for ``parallelism="ep"``, whose
+  all-to-all dispatch/combine are expressed over the fixed-shape
+  ``(E, C, d)`` buffers; the dropless port of the ep collectives is an open
+  item (see DESIGN.md §MoE dispatch).
 
 Parallelism modes:
 * ``tp`` (default): expert FFN hidden dim sharded over the model axis; the
@@ -17,13 +28,14 @@ Parallelism modes:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..dist.sharding import constrain
+from ..kernels import ops
 from .common import ArrayDef
 
 F32 = jnp.float32
@@ -36,6 +48,7 @@ class MoEConfig:
     n_experts: int
     top_k: int
     capacity_factor: float = 1.0
+    dispatch: str = "dropless"       # "dropless" | "capacity"
     parallelism: str = "tp"          # "tp" | "ep"
     ep_axis_size: int = 16           # pad target for ep mode
 
@@ -45,6 +58,14 @@ class MoEConfig:
             return self.n_experts
         m = self.ep_axis_size
         return ((self.n_experts + m - 1) // m) * m
+
+    @property
+    def effective_dispatch(self) -> str:
+        # ep's all-to-alls are written over fixed-shape capacity buffers;
+        # until the ragged all-to-all is ported, ep implies capacity.
+        if self.parallelism == "ep":
+            return "capacity"
+        return self.dispatch
 
 
 def moe_defs(cfg: MoEConfig):
@@ -62,14 +83,87 @@ def moe_defs(cfg: MoEConfig):
     }
 
 
+# ================================================================= routing
+def route_tokens(router, x2d, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
+    """Per-token top-k routing: (T, d) -> (gates (T, k) f32, experts (T, k)).
+
+    This is THE routing function — prefill, chunked prefill and decode all
+    call it on their flattened token sets.  It looks at one token at a time
+    (softmax over experts, top-k, renormalize), so the token->expert
+    assignment is bitwise-identical no matter how the token stream is
+    chunked into batches.
+    """
+    E = cfg.padded_experts
+    logits = jnp.einsum("td,de->te", x2d.astype(F32), router)
+    if E != cfg.n_experts:  # mask dead padding experts (ep mode)
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, cfg.top_k)            # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, experts.astype(jnp.int32)
+
+
+# ========================================================= dropless dispatch
+def _moe_dropless(p, x, cfg: MoEConfig):
+    """Sorted ragged dispatch: no capacity, no drops.
+
+    argsort tokens by expert id -> contiguous per-expert segments -> grouped
+    SwiGLU GEMM over the ragged segments -> gate-weighted scatter-add back
+    to token order.  The argsort is stable, so within an expert's segment
+    tokens keep stream order and each token's k contributions combine in
+    ascending-expert order — both independent of batch chunking.
+    """
+    B, S, d = x.shape
+    E = cfg.padded_experts
+    k = cfg.top_k
+    T = B * S
+
+    xt = x.reshape(T, d)
+    gates, experts = route_tokens(p["router"], xt, cfg)         # (T, k)
+
+    flat_e = experts.reshape(T * k)
+    order = jnp.argsort(flat_e, stable=True)                    # (T*k,)
+    tok_idx = order // k                # source token of each sorted row
+    xs = jnp.take(xt, tok_idx, axis=0)                          # (T*k, d)
+    group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+
+    ys = ops.moe_grouped_ffn(xs, p["w_gate"], p["w_up"], p["w_down"],
+                             group_sizes)                       # (T*k, d)
+
+    gs = gates.reshape(T * k)[order]                            # f32
+    y = jnp.zeros((T, d), F32).at[tok_idx].add(ys.astype(F32) * gs[:, None])
+    y = y.astype(x.dtype).reshape(B, S, d)
+    return constrain(y, ("batch", "seq", "embed"))
+
+
+# ========================================================= capacity dispatch
 def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    """True per-row expert capacity: ceil(S*k/E * capacity_factor),
+    floored at ``top_k``.
+
+    The floor is the explicit, documented minimum (a row can always place
+    one full token's worth of picks) that replaces the old magic
+    ``max(8, ...)``, which silently overrode ``capacity_factor`` at small
+    S.  Above the floor, ``capacity_factor`` is honored exactly; buffer
+    padding is layout-only (see ``_padded_capacity``)."""
+    assert cfg.capacity_factor > 0, cfg.capacity_factor
     cap = int(np.ceil(tokens * cfg.top_k / cfg.padded_experts
                       * cfg.capacity_factor))
-    return max(8, -(-cap // 8) * 8)  # pad to a multiple of 8
+    return max(cap, cfg.top_k)
 
 
-def moe(p, x, cfg: MoEConfig):
-    """x: (B, S, d) -> (B, S, d).  Dropped tokens pass through (residual).
+def _padded_capacity(cap: int) -> int:
+    """Buffer-layout padding: round the slot dim up to a multiple of 8
+    (TPU sublane alignment).  Padding slots are *dead* — the drop decision
+    (``slot < cap``) uses the true capacity, so padding never silently
+    admits tokens beyond what ``capacity_factor`` allows."""
+    return -(-cap // 8) * 8
+
+
+def _moe_capacity(p, x, cfg: MoEConfig):
+    """GShard-style capacity-bounded dispatch; dropped tokens pass through
+    (residual).
 
     Dispatch is *per batch row* (GShard's per-group capacity): slot
     assignment (cumsum), scatter and gather all happen within a row, so on a
@@ -80,17 +174,14 @@ def moe(p, x, cfg: MoEConfig):
     """
     B, S, d = x.shape
     E = cfg.padded_experts
-    C = _capacity(S, cfg)                                       # per row
+    cap = _capacity(S, cfg)                                     # per row
+    C = _padded_capacity(cap)                                   # buffer slots
     Tk = S * cfg.top_k
 
-    logits = jnp.einsum("bsd,de->bse", x.astype(F32), p["router"])
-    if E != cfg.n_experts:  # mask dead padding experts
-        pad_mask = jnp.arange(E) >= cfg.n_experts
-        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
-    probs = jax.nn.softmax(logits, axis=-1)
-    gate_vals, expert_ids = jax.lax.top_k(probs, cfg.top_k)     # (B, S, k)
-    gate_vals = gate_vals / jnp.maximum(
-        gate_vals.sum(-1, keepdims=True), 1e-9)                  # renormalize
+    gate_vals, expert_ids = route_tokens(
+        p["router"], x.reshape(B * S, d), cfg)
+    gate_vals = gate_vals.reshape(B, S, cfg.top_k)
+    expert_ids = expert_ids.reshape(B, S, cfg.top_k)
 
     # Slot assignment within each row: running count of earlier picks of the
     # same expert.  int16 is enough (C < 32768 at these shapes) and halves
@@ -101,7 +192,7 @@ def moe(p, x, cfg: MoEConfig):
     slot = jnp.take_along_axis(
         pos_in_e, flat_e[..., None].astype(jnp.int32), axis=2)[..., 0]
     slot = slot.astype(jnp.int32)
-    in_cap = slot < C
+    in_cap = slot < cap                # drop rule: true capacity, not padded
 
     # Scatter tokens into per-row (E, C, d) buffers.  vmap over rows keeps
     # the batch dim a *batching* dim of the scatter (GSPMD partitions it);
@@ -141,8 +232,27 @@ def moe(p, x, cfg: MoEConfig):
     return constrain(y, ("batch", "seq", "embed"))
 
 
-def moe_decode(p, x, cfg: MoEConfig):
-    """Decode-time MoE for a single token per sequence: dense top-k gather of
-    expert weights would be ragged; with one token the capacity path is
-    overkill, so route through the same code with T=B tokens."""
-    return moe(p, x, cfg)
+# ================================================================== facade
+def moe(p, x, cfg: MoEConfig, dispatch: Optional[str] = None):
+    """x: (B, S, d) -> (B, S, d).
+
+    ``dispatch`` overrides ``cfg.effective_dispatch`` (tests / benchmarks);
+    production callers leave it None and get dropless unless the config pins
+    the capacity path (ep mode).
+    """
+    mode = dispatch if dispatch is not None else cfg.effective_dispatch
+    if mode == "dropless":
+        return _moe_dropless(p, x, cfg)
+    assert mode == "capacity", mode
+    return _moe_capacity(p, x, cfg)
+
+
+def moe_decode(p, x, cfg: MoEConfig, dispatch: Optional[str] = None):
+    """Decode-time MoE: x is (B, 1, d), one new token per sequence.
+
+    Not a separate code path: decode flows through ``moe`` and therefore
+    ``route_tokens`` + the same grouped GEMM as prefill, which is the
+    guarantee that ring-decode logits match prefill logits (the two compute
+    the same mathematical function of each token's hidden state, and the
+    assignment is bitwise-identical regardless of chunking)."""
+    return moe(p, x, cfg, dispatch=dispatch)

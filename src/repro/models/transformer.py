@@ -45,7 +45,7 @@ from .layers import (
     rmsnorm_defs,
     rope,
 )
-from .moe import MoEConfig, moe, moe_defs
+from .moe import MoEConfig, moe, moe_decode, moe_defs
 from .ssm import SSMConfig, ssm_decode, ssm_defs, ssm_forward
 from .xlstm import (
     XLSTMConfig,
@@ -81,6 +81,7 @@ class Model:
             self.moe_cfg = MoEConfig(
                 d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
                 top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+                dispatch=cfg.moe_dispatch,
                 parallelism=cfg.moe_parallelism,
             )
         if cfg.family == "hybrid":
@@ -408,7 +409,10 @@ class Model:
                 x = x + y
                 h2 = rmsnorm(lp["ln2"], x)
                 if cfg.family == "moe":
-                    x = x + moe(lp["moe"], h2, self.moe_cfg)
+                    # moe_decode == moe: decode shares the routing function
+                    # and grouped GEMM with prefill, so a token's expert
+                    # assignment never depends on how the stream is chunked.
+                    x = x + moe_decode(lp["moe"], h2, self.moe_cfg)
                 else:
                     x = x + mlp(lp["mlp"], h2)
                 return x, (ck, cv)

@@ -32,7 +32,7 @@ from ..core.fragmentation import ChunkStats
 from ..core.profiler import ArenaProfile, IntervalProfile
 from ..core.runtime import MigrationPlan
 from ..models.layers import lm_head, mlp, rmsnorm, rope
-from ..models.moe import moe
+from ..models.moe import moe_decode
 from ..models.transformer import Model
 from .eviction import make_eviction_policy
 from .kvcache import PagedKVPool
@@ -239,7 +239,10 @@ class Engine:
                 x = x + y
                 h2 = rmsnorm(lp["ln2"], x)
                 if mc.family == "moe":
-                    x = x + moe(lp["moe"], h2, model.moe_cfg)
+                    # Same dropless routing + grouped GEMM as model.prefill,
+                    # so the engine's chunked prefill (prompt tokens stepped
+                    # through this path) computes the identical function.
+                    x = x + moe_decode(lp["moe"], h2, model.moe_cfg)
                 else:
                     x = x + mlp(lp["mlp"], h2)
                 return x, (kp, vp)
@@ -258,10 +261,13 @@ class Engine:
         req = Request(request_id=request_id, tokens=list(prompt),
                       max_new=max_new)
         self.requests[request_id] = req
-        # Prefill by stepping the prompt tokens through decode (exact; the
-        # contiguous fast path is model.prefill + paginate, not needed at
-        # engine-test scale).  The last prompt token is fed by the first
-        # step(), whose logits produce the first generated token.
+        # Chunked prefill: step the prompt tokens through the decode path.
+        # Exact by construction — dropless MoE dispatch and per-token
+        # routing make step-by-step ingestion compute the same function as
+        # batched model.prefill (the contiguous fast path + paginate is a
+        # perf option, not a correctness one, at engine-test scale).  The
+        # last prompt token is fed by the first step(), whose logits
+        # produce the first generated token.
         for t in prompt[:-1]:
             self._decode_one(req, t)
 

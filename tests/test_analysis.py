@@ -164,15 +164,33 @@ def test_direct_collectives_counted_once():
     assert int(out.split()[1]) >= 1
 
 
-def test_flops_validation_against_6nd():
+@pytest.fixture(scope="module")
+def dryrun_train_artifact(tmp_path_factory):
+    """The dry-run artifact the 6ND validation reads.  A full dry-run drop
+    (results/dryrun/...) is preferred when present; otherwise the artifact
+    is regenerated trace-only into a tmpdir — jaxpr costs are mesh- and
+    compile-independent, so a 1x1 mesh on the test host reproduces the
+    pod256 numbers exactly and the assertions always run (no silent skip)."""
+    real = os.path.join(REPO, "results", "dryrun", "pod256",
+                        "llama3_2_1b__train_4k.json")
+    if os.path.exists(real):
+        return real
+    from repro.launch.dryrun import run_cell
+    from repro.launch.mesh import compat_make_mesh
+
+    outdir = str(tmp_path_factory.mktemp("dryrun") / "pod256")
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
+    rec = run_cell("llama3_2_1b", "train_4k", mesh, "pod256", outdir,
+                   trace_only=True)
+    assert rec["status"] == "ok", rec.get("error")
+    return os.path.join(outdir, "llama3_2_1b__train_4k.json")
+
+
+def test_flops_validation_against_6nd(dryrun_train_artifact):
     """The headline validation: full train step flops within 5% of the
     analytic remat-inclusive 8*N*D (also asserted in EXPERIMENTS.md)."""
     import json
-    path = os.path.join(REPO, "results", "dryrun", "pod256",
-                        "llama3_2_1b__train_4k.json")
-    if not os.path.exists(path):
-        pytest.skip("dry-run artifacts not generated")
-    rec = json.load(open(path))
+    rec = json.load(open(dryrun_train_artifact))
     from repro.configs import get
     from repro.models import build_model
     from repro.models.common import count_params

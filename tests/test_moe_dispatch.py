@@ -1,0 +1,245 @@
+"""Dropless MoE dispatch: chunking-invariance parity + grouped-GEMM kernel.
+
+The serving-correctness contract (tests/test_ring_kv.py depends on it):
+token->expert assignment and combined outputs must not depend on how the
+token stream is chunked — batched prefill, chunked prefill and step-by-step
+decode compute the same function.  Parity is checked at the layer level
+across tp/ep parallelism, top_k in {1, 2}, and padded-expert (ep) configs;
+the Pallas grouped-expert GEMM is swept against the jnp oracle on
+randomized ragged group sizes including empty groups.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.moe_gemm import make_group_metadata, moe_grouped_ffn_pallas
+from repro.models.common import init_params
+from repro.models.moe import (
+    MoEConfig,
+    _capacity,
+    _padded_capacity,
+    moe,
+    moe_decode,
+    moe_defs,
+    route_tokens,
+)
+
+F32 = jnp.float32
+
+
+def make_cfg(top_k=2, parallelism="tp", n_experts=6, **kw):
+    return MoEConfig(d_model=32, d_ff=48, n_experts=n_experts, top_k=top_k,
+                     parallelism=parallelism, ep_axis_size=4, **kw)
+
+
+def f32_params(cfg, seed=0):
+    return jax.tree.map(
+        lambda a: a.astype(F32) if a.dtype == jnp.bfloat16 else a,
+        init_params(moe_defs(cfg), jax.random.PRNGKey(seed)))
+
+
+# ============================================================ routing parity
+@pytest.mark.parametrize("parallelism", ["tp", "ep"])
+@pytest.mark.parametrize("top_k", [1, 2])
+def test_routing_assignment_chunking_invariant(parallelism, top_k):
+    """route_tokens is per-token: any chunking of the stream yields the
+    bitwise-identical token->expert assignment."""
+    cfg = make_cfg(top_k=top_k, parallelism=parallelism)
+    p = f32_params(cfg)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(40, cfg.d_model)), F32)
+
+    gates_full, eids_full = route_tokens(p["router"], x, cfg)
+    for chunk in (1, 5, 8):
+        parts = [route_tokens(p["router"], x[i:i + chunk], cfg)
+                 for i in range(0, x.shape[0], chunk)]
+        gates = jnp.concatenate([g for g, _ in parts])
+        eids = jnp.concatenate([e for _, e in parts])
+        np.testing.assert_array_equal(np.asarray(eids),
+                                      np.asarray(eids_full))
+        np.testing.assert_allclose(np.asarray(gates),
+                                   np.asarray(gates_full), rtol=1e-6)
+    # ep pads 6 experts up to 8 with dead experts the router must never pick.
+    assert int(eids_full.max()) < cfg.n_experts
+
+
+@pytest.mark.parametrize("top_k", [1, 2])
+def test_padded_ep_routing_matches_unpadded(top_k):
+    """Dead padding experts (ep: 6 -> 8) preserve routing semantics exactly:
+    slicing the padded router/experts back to n_experts gives a tp config
+    with the identical assignment."""
+    ep = make_cfg(top_k=top_k, parallelism="ep")
+    assert ep.padded_experts == 8
+    p_ep = f32_params(ep)
+    tp = make_cfg(top_k=top_k, parallelism="tp")
+    p_tp = {
+        "router": p_ep["router"][:, : ep.n_experts],
+        "w_gate": p_ep["w_gate"][: ep.n_experts],
+        "w_up": p_ep["w_up"][: ep.n_experts],
+        "w_down": p_ep["w_down"][: ep.n_experts],
+    }
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(32, ep.d_model)), F32)
+    g_ep, e_ep = route_tokens(p_ep["router"], x, ep)
+    g_tp, e_tp = route_tokens(p_tp["router"], x, tp)
+    np.testing.assert_array_equal(np.asarray(e_ep), np.asarray(e_tp))
+    np.testing.assert_allclose(np.asarray(g_ep), np.asarray(g_tp), rtol=1e-6)
+
+
+# ======================================================== layer-level parity
+@pytest.mark.parametrize("parallelism", ["tp", "ep"])
+@pytest.mark.parametrize("top_k", [1, 2])
+def test_dropless_outputs_chunking_invariant(parallelism, top_k):
+    """Batched prefill == chunked prefill == step-by-step decode, as arrays
+    (f32 isolates the invariance claim from bf16 rounding noise).  For the
+    ep (padded-expert) config the dropless path is forced via the dispatch
+    override — parity is a property of the dispatch algorithm, not of the
+    sharding mode."""
+    cfg = make_cfg(top_k=top_k, parallelism=parallelism)
+    p = f32_params(cfg)
+    rng = np.random.default_rng(2)
+    S = 24
+    x = jnp.asarray(rng.normal(size=(1, S, cfg.d_model)), F32)
+
+    y_full = moe(p, x, cfg, dispatch="dropless")
+    for chunk in (4, 7):
+        y_chunks = jnp.concatenate(
+            [moe(p, x[:, i:i + chunk], cfg, dispatch="dropless")
+             for i in range(0, S, chunk)], axis=1)
+        np.testing.assert_allclose(np.asarray(y_chunks), np.asarray(y_full),
+                                   atol=1e-5, rtol=1e-5)
+    y_steps = jnp.concatenate(
+        [moe_decode(p, x[:, i:i + 1], cfg, dispatch="dropless")
+         for i in range(S)], axis=1)
+    np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_full),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_single_token_capacity_equals_dropless():
+    """At S=1 the capacity path cannot drop (top-k picks are distinct
+    experts), so both dispatch modes agree — the decode-side anchor that
+    made the pre-fix prefill divergence a pure prefill bug."""
+    cfg = make_cfg(top_k=2)
+    p = f32_params(cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(3, 1, cfg.d_model)), F32)
+    y_cap = moe(p, x, cfg, dispatch="capacity")
+    y_drop = moe(p, x, cfg, dispatch="dropless")
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_drop),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_capacity_floor_honors_capacity_factor():
+    """The old max(8, ...) floor silently overrode capacity_factor at small
+    S; the true capacity is now exact (floored only at top_k) and padding
+    is buffer layout, not a drop-rule change."""
+    cfg = make_cfg(top_k=2, n_experts=8, parallelism="tp")
+    assert _capacity(4, cfg) == 2          # ceil(4*2/8) = 1 -> top_k floor
+    assert _capacity(16, cfg) == 4         # ceil(16*2/8) = 4, not 8
+    assert _capacity(1, cfg) == cfg.top_k
+    cfg2 = make_cfg(top_k=2, n_experts=8, capacity_factor=2.0)
+    assert _capacity(16, cfg2) == 8
+    assert _padded_capacity(2) == 8        # layout: multiple of 8
+    assert _padded_capacity(9) == 16
+
+
+def test_ep_config_pins_capacity_dispatch():
+    cfg = make_cfg(parallelism="ep")
+    assert cfg.effective_dispatch == "capacity"
+    assert make_cfg(parallelism="tp").effective_dispatch == "dropless"
+
+
+def test_dropless_is_differentiable():
+    cfg = make_cfg(top_k=2)
+    p = f32_params(cfg)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(2, 8, cfg.d_model)), F32)
+    grads = jax.grad(lambda p: moe(p, x, cfg).sum())(p)
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+# ===================================================== grouped GEMM kernel
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 1e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_grouped_gemm_matches_reference(dtype, seed):
+    """Pallas (interpret) vs oracle on randomized ragged group sizes,
+    empty groups forced, ragged tile-straddling boundaries included."""
+    rng = np.random.default_rng(seed)
+    E, d, f = int(rng.integers(2, 9)), 64, 96
+    sizes = rng.integers(0, 50, E)
+    sizes[rng.integers(0, E)] = 0
+    T = max(int(sizes.sum()), 1)
+    if sizes.sum() == 0:
+        sizes[0] = T
+    x = jnp.asarray(rng.normal(size=(T, d)), dtype)
+    wg = jnp.asarray(rng.normal(size=(E, d, f)) * 0.1, dtype)
+    wu = jnp.asarray(rng.normal(size=(E, d, f)) * 0.1, dtype)
+    wd = jnp.asarray(rng.normal(size=(E, f, d)) * 0.1, dtype)
+    gs = jnp.asarray(sizes, jnp.int32)
+    got = moe_grouped_ffn_pallas(x, wg, wu, wd, gs, block_t=32,
+                                 block_f=64, interpret=True)
+    want = ref.moe_grouped_ffn_reference(x, wg, wu, wd, gs)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_grouped_gemm_grad_matches_reference():
+    """The kernel's custom VJP (reference-recompute backward, float0
+    cotangent for the integer group_sizes) against jax.grad of the oracle."""
+    rng = np.random.default_rng(7)
+    E, d, f = 4, 32, 48
+    sizes = np.array([5, 0, 9, 2])
+    T = int(sizes.sum())
+    x = jnp.asarray(rng.normal(size=(T, d)), F32)
+    wg = jnp.asarray(rng.normal(size=(E, d, f)) * 0.1, F32)
+    wu = jnp.asarray(rng.normal(size=(E, d, f)) * 0.1, F32)
+    wd = jnp.asarray(rng.normal(size=(E, f, d)) * 0.1, F32)
+    gs = jnp.asarray(sizes, jnp.int32)
+    g_kernel = jax.grad(
+        lambda *a: moe_grouped_ffn_pallas(*a, gs, block_t=16, block_f=32,
+                                          interpret=True).sum(),
+        argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    g_ref = jax.grad(
+        lambda *a: ref.moe_grouped_ffn_reference(*a, gs).sum(),
+        argnums=(0, 1, 2, 3))(x, wg, wu, wd)
+    for a, b in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_group_metadata_covers_every_row_once(seed):
+    """Property check of the logical-tile schedule: every row is claimed by
+    its own expert's segment (never another's), every real row is covered,
+    and padded schedule entries only replay rows already owned."""
+    rng = np.random.default_rng(seed)
+    E = int(rng.integers(1, 9))
+    bt = int(rng.choice([8, 16, 32]))
+    sizes = rng.integers(0, 5 * bt, E)
+    T = int(sizes.sum())
+    if T == 0:
+        sizes[0] = 3
+        T = 3
+    rows = -(-T // bt) * bt
+    gids, mids, offs = jax.jit(
+        make_group_metadata, static_argnums=(1, 2))(
+            jnp.asarray(sizes, jnp.int32), rows, bt)
+    gids, mids, offs = map(np.asarray, (gids, mids, offs))
+    assert len(gids) == rows // bt + E - 1
+    covered = np.zeros(T, bool)
+    prev_tile = 0
+    for g, mt in zip(gids, mids):
+        assert mt >= prev_tile          # out tiles revisit, never rewind
+        prev_tile = mt
+        lo = max(offs[g], mt * bt)
+        hi = min(offs[g + 1], (mt + 1) * bt)
+        covered[lo:hi] = True
+    assert covered.all()
