@@ -9,12 +9,19 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
+from repro.dist.collectives import (
+    ragged_all_to_all_reference,
+    ring_ragged_all_to_all,
+    shard_map_compat,
+)
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gemm import moe_grouped_ffn_pallas
 from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.launch.mesh import compat_make_mesh
 
 from .common import emit
 
@@ -97,6 +104,35 @@ def run(quick: bool = False):
     err = float(jnp.abs(got - want).max())
     rows.append(("kernels/moe_grouped_gemm/oracle", us_ref, 0.0))
     rows.append(("kernels/moe_grouped_gemm/pallas_interpret", us_pal, err))
+
+    # ragged all-to-all (dropless ep MoE dispatch): ring ppermute
+    # decomposition vs the dense all-gather oracle, over however many
+    # devices this process has (CI's 8-device job makes it a real
+    # exchange; on one device it degenerates to the local copy).
+    n = jax.device_count()
+    mesh = compat_make_mesh((n,), ("model",))
+    R, dr = (32, 64) if quick else (128, 256)
+    sizes = rng.integers(1, max(R // n, 2), (n, n)).astype(np.int32)
+    if n > 1:
+        sizes[0, :] = 0                      # an empty-send shard
+    payload = jnp.asarray(rng.normal(size=(n, R, dr)), jnp.float32)
+    send = jnp.asarray(sizes)
+    recv = jnp.asarray(np.ascontiguousarray(sizes.T))
+
+    def _a2a(fn):
+        def body(rows_blk, send_blk, recv_blk):
+            return fn(rows_blk[0], send_blk[0], recv_blk[0], "model",
+                      chunk_rows=R, out_rows=n * R)[None]
+        spec = PartitionSpec("model")
+        return jax.jit(shard_map_compat(
+            body, mesh, in_specs=(spec, spec, spec), out_specs=spec))
+
+    want, us_ref = _time(_a2a(ragged_all_to_all_reference), payload, send,
+                         recv)
+    got, us_ring = _time(_a2a(ring_ragged_all_to_all), payload, send, recv)
+    err = float(jnp.abs(got - want).max())
+    rows.append(("kernels/ragged_all_to_all/dense_oracle", us_ref, 0.0))
+    rows.append(("kernels/ragged_all_to_all/ring", us_ring, err))
     return emit(rows)
 
 

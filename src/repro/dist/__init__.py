@@ -20,6 +20,8 @@ from .sharding import (
     MOMENTS_RULES,
     SP_DECODE_RULES,
     abstract_mesh,
+    active_mesh,
+    batch_data_axes,
     batch_pspec,
     constrain,
     logical_to_pspec,
@@ -34,6 +36,8 @@ __all__ = [
     "MOMENTS_RULES",
     "SP_DECODE_RULES",
     "abstract_mesh",
+    "active_mesh",
+    "batch_data_axes",
     "batch_pspec",
     "compress_with_feedback",
     "constrain",

@@ -107,6 +107,23 @@ def _axis_sizes(mesh) -> Dict[str, int]:
     return dict(mesh.shape)
 
 
+def _shed_until_divisible(axes, axis_sizes, size):
+    """THE divisibility fallback: drop trailing axes until ``size`` divides
+    the product of the remainder; shedding everything replicates (the GQA
+    fallback).  Shared by ``logical_to_pspec`` and ``batch_data_axes`` so
+    the rule cannot drift between the pspec resolver and the shard_map
+    paths that mirror it."""
+    axes = list(axes)
+    while axes:
+        total = 1
+        for a in axes:
+            total *= axis_sizes[a]
+        if total > 0 and size % total == 0:
+            break
+        axes.pop()
+    return axes
+
+
 def logical_to_pspec(
     names: Sequence[Optional[str]],
     sizes: Sequence[int],
@@ -138,15 +155,7 @@ def logical_to_pspec(
         # Axes the mesh lacks, or that an earlier dim consumed, drop out —
         # the same rule serves meshes of different topology.
         axes = [a for a in axes if a in axis_sizes and a not in used]
-        # Divisibility fallback: shed trailing axes until the dim divides
-        # evenly; shedding everything replicates (the GQA fallback).
-        while axes:
-            total = 1
-            for a in axes:
-                total *= axis_sizes[a]
-            if total > 0 and size % total == 0:
-                break
-            axes.pop()
+        axes = _shed_until_divisible(axes, axis_sizes, size)
         used.update(axes)
         entries.append(
             tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
@@ -166,6 +175,13 @@ def _active_mesh():
     return None
 
 
+def active_mesh():
+    """Public accessor for the ambient ``with mesh:`` context (or None).
+    Model code uses it to decide whether an explicit shard_map path (the
+    ragged ep MoE dispatch) applies."""
+    return _active_mesh()
+
+
 def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
     """``with_sharding_constraint`` by logical axis names.
 
@@ -181,10 +197,24 @@ def constrain(x: jax.Array, names: Sequence[Optional[str]]) -> jax.Array:
         x, jax.sharding.NamedSharding(mesh, spec))
 
 
+def batch_data_axes(mesh, size: Optional[int] = None) -> Tuple[str, ...]:
+    """The data-parallel axes of ``mesh`` (``pod``+``data`` when present)
+    that can shard a dimension of ``size``: trailing axes are shed until
+    the size divides evenly, the same fallback ``logical_to_pspec``
+    applies.  ``size=None`` skips the divisibility check.  This is THE
+    definition of which mesh axes carry the batch — the shard_map MoE ep
+    path and the data pipeline both resolve through it."""
+    sizes = _axis_sizes(mesh)
+    axes = [a for a in ("pod", "data") if a in sizes]
+    if size is not None:
+        axes = _shed_until_divisible(axes, sizes, size)
+    return tuple(axes)
+
+
 def batch_pspec(mesh) -> PartitionSpec:
     """PartitionSpec sharding dim 0 over the data-parallel axes of ``mesh``
     (pod+data when present).  Used by the data pipeline for host batches."""
-    axes = tuple(a for a in ("pod", "data") if a in _axis_sizes(mesh))
+    axes = batch_data_axes(mesh)
     if not axes:
         return PartitionSpec()
     return PartitionSpec(axes if len(axes) > 1 else axes[0])

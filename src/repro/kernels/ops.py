@@ -58,16 +58,20 @@ def paged_attention(q, k_pool, v_pool, page_table, lengths,
                                   interpret=(mode == "interpret"))
 
 
-def moe_grouped_ffn(x, w_gate, w_up, w_down, group_sizes):
+def moe_grouped_ffn(x, w_gate, w_up, w_down, group_sizes,
+                    group_experts=None):
     """Grouped-expert SwiGLU over sorted ragged segments (dropless MoE
-    dispatch).  x: (T, d) argsorted by expert; group_sizes: (E,) int32."""
+    dispatch).  x: (T, d) argsorted by group; group_sizes: (G,) int32;
+    group_experts: optional (G,) int32 group->expert weight map (None means
+    G == E and groups are experts)."""
     mode = current_mode()
     if mode == "reference":
         return ref.moe_grouped_ffn_reference(x, w_gate, w_up, w_down,
-                                             group_sizes)
+                                             group_sizes, group_experts)
     from .moe_gemm import moe_grouped_ffn_pallas
 
     return moe_grouped_ffn_pallas(x, w_gate, w_up, w_down, group_sizes,
+                                  group_experts,
                                   interpret=(mode == "interpret"))
 
 

@@ -75,22 +75,28 @@ def paged_attention_reference(q, k_pool, v_pool, page_table, lengths,
 
 
 # ---------------------------------------------------- grouped-expert GEMM
-def moe_grouped_ffn_reference(x, w_gate, w_up, w_down, group_sizes):
+def moe_grouped_ffn_reference(x, w_gate, w_up, w_down, group_sizes,
+                              group_experts=None):
     """Grouped-expert SwiGLU over sorted ragged segments — jnp oracle.
 
-    x: (T, d) tokens sorted by expert id (contiguous per-expert segments);
+    x: (T, d) tokens sorted by group id (contiguous ragged segments);
     w_gate/w_up: (E, d, f); w_down: (E, f, d);
-    group_sizes: (E,) int32 summing to T (empty groups allowed).
+    group_sizes: (G,) int32 summing to T (empty groups allowed);
+    group_experts: (G,) int32 mapping each group to its expert weights
+    (None means G == E, the classic per-expert layout).
 
     Every expert's FFN is applied densely to all T rows, and the final
-    einsum against the segment one-hot performs the segment-select (a
+    einsum against the row->expert one-hot performs the segment-select (a
     segment_sum over the expert axis).  O(E) times the flops of the ragged
     kernel — it's the correctness oracle and the non-TPU lowering, where
     smoke-scale shapes make the overhead irrelevant.
     """
     T, d = x.shape
     E = w_gate.shape[0]
-    seg = jnp.repeat(jnp.arange(E), group_sizes, total_repeat_length=T)
+    G = group_sizes.shape[0]
+    seg = jnp.repeat(jnp.arange(G), group_sizes, total_repeat_length=T)
+    if group_experts is not None:
+        seg = group_experts.astype(jnp.int32)[seg]
     xf = x.astype(F32)
     g = jnp.einsum("td,edf->etf", xf, w_gate.astype(F32))
     u = jnp.einsum("td,edf->etf", xf, w_up.astype(F32))

@@ -27,6 +27,8 @@ class ModelConfig:
     top_k: int = 0
     moe_parallelism: str = "tp"           # "tp" | "ep"
     moe_dispatch: str = "dropless"        # "dropless" | "capacity"
+    moe_ep_axis_size: int = 16            # ep expert-pad target; must be a
+                                          # multiple of the mesh model axis
     capacity_factor: float = 1.0          # capacity path only
     # SSM / hybrid
     ssm_state: int = 0
@@ -58,6 +60,8 @@ class ModelConfig:
             assert self.n_experts > 0 and self.top_k > 0
             assert self.moe_dispatch in ("dropless", "capacity"), \
                 self.moe_dispatch
+            if self.moe_parallelism == "ep":
+                assert self.moe_ep_axis_size > 0, self.moe_ep_axis_size
         if self.family == "hybrid":
             assert self.ssm_state > 0 and self.attn_every > 0
         if self.family == "encdec":

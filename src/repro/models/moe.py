@@ -2,18 +2,19 @@
 
 Two dispatch modes (``MoEConfig.dispatch``):
 
-* ``dropless`` (default): sorted ragged routing.  Tokens are argsorted by
-  expert id into contiguous per-expert segments and the expert SwiGLU runs
-  as a grouped GEMM over the ragged segments (``kernels/moe_gemm.py`` on
-  TPU, a masked-einsum oracle elsewhere).  No token is ever dropped, so the
-  layer computes the *same function* for batched prefill, chunked prefill
-  and single-token decode — routing is per-token and chunking-invariant.
+* ``dropless`` (default, both parallelism modes): sorted ragged routing.
+  Tokens are argsorted by expert id into contiguous per-expert segments and
+  the expert SwiGLU runs as a grouped GEMM over the ragged segments
+  (``kernels/moe_gemm.py`` on TPU, a masked-einsum oracle elsewhere).  No
+  token is ever dropped, so the layer computes the *same function* for
+  batched prefill, chunked prefill and single-token decode — routing is
+  per-token and chunking-invariant.  The argsort is *per batch row* (one
+  ragged segment per (row, expert) pair), so on a batch-sharded mesh every
+  dispatch structure stays shard-local — no cross-data-shard gather.
 
 * ``capacity``: GShard-style capacity-bounded scatter dispatch (tokens over
-  capacity are dropped).  Retained for ``parallelism="ep"``, whose
-  all-to-all dispatch/combine are expressed over the fixed-shape
-  ``(E, C, d)`` buffers; the dropless port of the ep collectives is an open
-  item (see DESIGN.md §MoE dispatch).
+  capacity are dropped).  Retained as an explicit opt-in for comparison
+  benchmarks; nothing pins it anymore.
 
 Parallelism modes:
 * ``tp`` (default): expert FFN hidden dim sharded over the model axis; the
@@ -21,8 +22,14 @@ Parallelism modes:
   count (40 experts on a 16-way axis included).
 * ``ep``: experts sharded over the model axis; expert count is padded up to
   a multiple of the axis with *dead* experts that the router masks to zero
-  probability (semantics preserved exactly).  Dispatch/combine become
-  all-to-alls on the model axis.
+  probability (semantics preserved exactly).  Under an active multi-device
+  mesh, dropless ep dispatch/combine run as ragged (dropless) all-to-alls
+  inside an explicit shard_map: per-shard ``group_sizes`` metadata is
+  exchanged with one tiny all-gather, row payloads move over
+  ``ring_ragged_all_to_all`` (ppermute hops), and each shard runs the
+  grouped GEMM over its local (source shard x local expert) ragged
+  segments.  Routing flows through the same ``route_tokens`` as every
+  other path, so ep prefill, chunked prefill and decode agree exactly.
 """
 
 from __future__ import annotations
@@ -33,8 +40,10 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from ..dist.sharding import constrain
+from ..dist.collectives import ring_ragged_all_to_all, shard_map_compat
+from ..dist.sharding import active_mesh, batch_data_axes, constrain
 from ..kernels import ops
 from .common import ArrayDef
 
@@ -50,7 +59,7 @@ class MoEConfig:
     capacity_factor: float = 1.0
     dispatch: str = "dropless"       # "dropless" | "capacity"
     parallelism: str = "tp"          # "tp" | "ep"
-    ep_axis_size: int = 16           # pad target for ep mode
+    ep_axis_size: int = 16           # ep pad target; validated vs the mesh
 
     @property
     def padded_experts(self) -> int:
@@ -59,13 +68,21 @@ class MoEConfig:
         m = self.ep_axis_size
         return ((self.n_experts + m - 1) // m) * m
 
-    @property
-    def effective_dispatch(self) -> str:
-        # ep's all-to-alls are written over fixed-shape capacity buffers;
-        # until the ragged all-to-all is ported, ep implies capacity.
-        if self.parallelism == "ep":
-            return "capacity"
-        return self.dispatch
+    def validate_ep_axis(self, axis_size: int) -> None:
+        """``ep_axis_size`` is a config constant decoupled from the mesh it
+        eventually runs on (it fixes parameter shapes at init time), so call
+        sites that see the real mesh must check the two agree: the model
+        axis has to divide the padded expert count evenly or some shards
+        would own a different number of experts than others."""
+        if self.parallelism != "ep":
+            return
+        if axis_size <= 0 or self.padded_experts % axis_size != 0:
+            raise ValueError(
+                f"ep mesh mismatch: padded_experts={self.padded_experts} "
+                f"(n_experts={self.n_experts} padded to ep_axis_size="
+                f"{self.ep_axis_size}) does not divide evenly over a "
+                f"{axis_size}-way model axis; set ep_axis_size to a "
+                f"multiple of the mesh's model-axis size")
 
 
 def moe_defs(cfg: MoEConfig):
@@ -88,10 +105,10 @@ def route_tokens(router, x2d, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
     """Per-token top-k routing: (T, d) -> (gates (T, k) f32, experts (T, k)).
 
     This is THE routing function — prefill, chunked prefill and decode all
-    call it on their flattened token sets.  It looks at one token at a time
-    (softmax over experts, top-k, renormalize), so the token->expert
-    assignment is bitwise-identical no matter how the token stream is
-    chunked into batches.
+    call it on their flattened token sets (the ep shard_map path included).
+    It looks at one token at a time (softmax over experts, top-k,
+    renormalize), so the token->expert assignment is bitwise-identical no
+    matter how the token stream is chunked into batches.
     """
     E = cfg.padded_experts
     logits = jnp.einsum("td,de->te", x2d.astype(F32), router)
@@ -99,56 +116,251 @@ def route_tokens(router, x2d, cfg: MoEConfig) -> Tuple[jax.Array, jax.Array]:
         pad_mask = jnp.arange(E) >= cfg.n_experts
         logits = jnp.where(pad_mask[None, :], -1e30, logits)
     probs = jax.nn.softmax(logits, axis=-1)
-    gates, experts = jax.lax.top_k(probs, cfg.top_k)            # (T, k)
+    # Top-k as k iterative argmaxes — selection and order identical to
+    # jax.lax.top_k (descending value, ties to the lowest index), but it
+    # lowers to plain reduces the SPMD partitioner keeps shard-local,
+    # where the TopK custom-call all-gathers the (T, E) probs on a
+    # token-sharded mesh.  k and E are small; the passes are noise next
+    # to the expert FFN.
+    remaining = probs
+    gate_cols, expert_cols = [], []
+    for _ in range(cfg.top_k):
+        e = jnp.argmax(remaining, axis=-1)
+        gate_cols.append(
+            jnp.take_along_axis(remaining, e[:, None], axis=-1)[:, 0])
+        expert_cols.append(e.astype(jnp.int32))
+        remaining = jnp.where(
+            jnp.arange(E)[None, :] == e[:, None], -jnp.inf, remaining)
+    gates = jnp.stack(gate_cols, axis=-1)                       # (T, k)
+    experts = jnp.stack(expert_cols, axis=-1)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
-    return gates, experts.astype(jnp.int32)
+    return gates, experts
 
 
 # ========================================================= dropless dispatch
-def _moe_dropless(p, x, cfg: MoEConfig):
+def _sort_picks_by_expert(experts, k: int):
+    """Stable per-set argsort of the flattened (n*k,) expert picks.
+
+    Returns (order, tok_idx): ``order`` permutes pick-rows into contiguous
+    ascending-expert segments, ``tok_idx`` is each sorted row's source
+    token.  Stability keeps stream order within an expert's segment and
+    each token's k contributions combining in ascending-expert order —
+    both independent of batch chunking."""
+    order = jnp.argsort(experts, stable=True)
+    return order, order // k
+
+
+def _data_sharded() -> bool:
+    """True when the ambient mesh splits the batch over data axes — the
+    regime where per-row dispatch structures pay for themselves."""
+    mesh = active_mesh()
+    if mesh is None:
+        return False
+    return any(int(mesh.shape[a]) > 1 for a in batch_data_axes(mesh))
+
+
+def _moe_dropless(p, x, cfg: MoEConfig, per_row: Optional[bool] = None):
     """Sorted ragged dispatch: no capacity, no drops.
 
-    argsort tokens by expert id -> contiguous per-expert segments -> grouped
-    SwiGLU GEMM over the ragged segments -> gate-weighted scatter-add back
-    to token order.  The argsort is stable, so within an expert's segment
-    tokens keep stream order and each token's k contributions combine in
-    ascending-expert order — both independent of batch chunking.
+    Two segment layouts computing the identical per-token function (expert
+    FFNs are row-independent and each token's k contributions combine in
+    ascending-expert order under both):
+
+    * **per-row** (picked when a data-sharded mesh is active): each batch
+      row argsorts its own S*k picks, giving one contiguous ragged segment
+      per (row, expert) pair; the grouped SwiGLU GEMM runs over all B*E
+      segments at once (``group_experts`` maps segment -> expert weights)
+      and a vmapped gate-weighted scatter-add restores token order.
+      Keeping the sort, bincount and scatter *inside* the row makes the
+      batch dim a pure batching dim for GSPMD — every dispatch structure
+      stays shard-local, where a flat B*S*k sort gathers the whole token
+      stream across data shards (prefill_32k dry-run collective bytes).
+
+    * **flat** (meshless / undivided batch): one stable argsort over the
+      flat B*S*k picks into E per-expert segments.  Same math, but the
+      grouped GEMM's static logical-tile grid is row_tiles + E - 1 instead
+      of row_tiles + B*E - 1 — decode at B=64, E=48 would otherwise pay
+      ~60x the grid steps for shard-locality no single device needs.
     """
     B, S, d = x.shape
     E = cfg.padded_experts
     k = cfg.top_k
-    T = B * S
+    Sk = S * k
 
-    xt = x.reshape(T, d)
-    gates, experts = route_tokens(p["router"], xt, cfg)         # (T, k)
+    gates, experts = route_tokens(p["router"], x.reshape(B * S, d), cfg)
+    if per_row is None:
+        per_row = _data_sharded()
 
-    flat_e = experts.reshape(T * k)
-    order = jnp.argsort(flat_e, stable=True)                    # (T*k,)
-    tok_idx = order // k                # source token of each sorted row
-    xs = jnp.take(xt, tok_idx, axis=0)                          # (T*k, d)
-    group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+    if not per_row:
+        flat_e = experts.reshape(B * Sk)
+        order, tok_idx = _sort_picks_by_expert(flat_e, k)
+        xs = jnp.take(x.reshape(B * S, d), tok_idx, axis=0)     # (B*Sk, d)
+        group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+        ys = ops.moe_grouped_ffn(xs, p["w_gate"], p["w_up"], p["w_down"],
+                                 group_sizes)
+        gs = gates.reshape(B * Sk)[order]                       # f32
+        y = jnp.zeros((B * S, d), F32).at[tok_idx].add(
+            ys.astype(F32) * gs[:, None])
+        return constrain(y.astype(x.dtype).reshape(B, S, d),
+                         ("batch", "seq", "embed"))
 
-    ys = ops.moe_grouped_ffn(xs, p["w_gate"], p["w_up"], p["w_down"],
-                             group_sizes)                       # (T*k, d)
+    experts_r = experts.reshape(B, Sk)
+    gates_r = gates.reshape(B, Sk)
 
-    gs = gates.reshape(T * k)[order]                            # f32
-    y = jnp.zeros((T, d), F32).at[tok_idx].add(ys.astype(F32) * gs[:, None])
-    y = y.astype(x.dtype).reshape(B, S, d)
+    order, tok_in_row = jax.vmap(
+        lambda e: _sort_picks_by_expert(e, k))(experts_r)       # (B, Sk)
+    xs = jnp.take_along_axis(x, tok_in_row[..., None], axis=1)  # (B, Sk, d)
+    group_sizes = jax.vmap(
+        lambda e: jnp.bincount(e, length=E))(experts_r)         # (B, E)
+
+    ys = ops.moe_grouped_ffn(
+        xs.reshape(B * Sk, d), p["w_gate"], p["w_up"], p["w_down"],
+        group_sizes.reshape(B * E).astype(jnp.int32),
+        jnp.tile(jnp.arange(E, dtype=jnp.int32), B))            # (B*Sk, d)
+
+    gs = jnp.take_along_axis(gates_r, order, axis=1)            # f32
+
+    def row_combine(ys_row, tok_row, g_row):
+        return jnp.zeros((S, d), F32).at[tok_row].add(
+            ys_row.astype(F32) * g_row[:, None])
+
+    y = jax.vmap(row_combine)(ys.reshape(B, Sk, d), tok_in_row, gs)
+    y = y.astype(x.dtype)
     return constrain(y, ("batch", "seq", "embed"))
+
+
+# ==================================================== ragged ep dispatch
+def _ep_mesh(cfg: MoEConfig):
+    """The active mesh when the explicit ragged-ep shard_map path applies
+    (ep parallelism on a real multi-device model axis), else None."""
+    if cfg.parallelism != "ep":
+        return None
+    mesh = active_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return None
+    if int(mesh.shape["model"]) <= 1:
+        return None
+    return mesh
+
+
+def _moe_dropless_ep(p, x, cfg: MoEConfig, mesh):
+    """Ragged (dropless) expert-parallel dispatch: all-to-alls carry exactly
+    the routed rows, no capacity buffers, no drops.
+
+    Inside one shard_map over the mesh (batch over the data axes, experts
+    over ``model``), each model shard:
+
+      1. takes its static slice of the local token stream and routes it
+         through ``route_tokens`` (identical assignment to every other
+         path; slice-padding rows get gate 0 and contribute nothing),
+      2. argsorts its picks by global expert id — segments are contiguous
+         per destination shard because each shard owns a contiguous expert
+         range — and bincounts per-expert ``group_sizes``,
+      3. exchanges the (E,) count vectors with one tiny all-gather (the
+         metadata exchange), from which both sides of every ragged
+         transfer size are known,
+      4. moves row payloads with ``ring_ragged_all_to_all`` (ppermute
+         hops), runs the grouped GEMM over its local (source shard x local
+         expert) ragged segments via ``group_experts``, and sends results
+         back over the reverse ragged all-to-all (same function, sizes
+         swapped),
+      5. combines with gates in ascending-expert order per token (the same
+         order as the tp path) and all-gathers the token slices.
+
+    Per-token math is identical to ``_moe_dropless``: expert FFNs are
+    row-independent and combine order is fixed, so ep prefill, chunked
+    prefill and decode agree with each other and with tp-dropless.
+    """
+    B, S, d = x.shape
+    E = cfg.padded_experts
+    k = cfg.top_k
+    m = int(mesh.shape["model"])
+    cfg.validate_ep_axis(m)
+    E_loc = E // m
+
+    # Batch shards over the data axes when it divides evenly (the shared
+    # shed-until-divisible rule); everything else is replicated in.
+    dp = batch_data_axes(mesh, B)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    B_loc = B // dp_size
+    batch_entry = tuple(dp) if len(dp) > 1 else (dp[0] if dp else None)
+    x_spec = P(batch_entry, None, None)
+
+    T = B_loc * S                 # tokens per data shard
+    Tm = -(-T // m)               # static per-model-shard token slice
+    Rm = Tm * k                   # ragged-a2a chunk capacity: one slice's picks
+
+    def body(xb, router, wg, wu, wd):
+        e_idx = jax.lax.axis_index("model")
+        xt = jnp.pad(xb.reshape(T, d), ((0, m * Tm - T), (0, 0)))
+        my = jax.lax.dynamic_slice(xt, (e_idx * Tm, 0), (Tm, d))
+        live = (e_idx * Tm + jnp.arange(Tm)) < T      # slice-padding rows
+        gates, experts = route_tokens(router, my, cfg)          # (Tm, k)
+        gates = gates * live[:, None].astype(gates.dtype)
+
+        flat_e = experts.reshape(Rm)
+        order, tok_idx = _sort_picks_by_expert(flat_e, k)
+        xs = jnp.take(my, tok_idx, axis=0)                      # (Rm, d)
+        counts = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+        send_sizes = counts.reshape(m, E_loc).sum(axis=1)       # (m,)
+
+        # Metadata exchange: every shard learns every peer's per-expert
+        # counts, so both directions of the ragged transfers are sized
+        # locally — no per-row size handshake.
+        all_counts = jax.lax.all_gather(counts, "model", axis=0)  # (m, E)
+        my_counts = jax.lax.dynamic_slice(
+            all_counts, (0, e_idx * E_loc), (m, E_loc))
+        recv_sizes = my_counts.sum(axis=1)                      # (m,)
+
+        recv = ring_ragged_all_to_all(
+            xs, send_sizes, recv_sizes, "model",
+            chunk_rows=Rm, out_rows=m * Rm)                     # (m*Rm, d)
+
+        # Shard-local grouped GEMM over (source shard, local expert) ragged
+        # segments; group_experts folds the m-fold segment layout onto the
+        # shard's E_loc expert weights.
+        ys = ops.moe_grouped_ffn(
+            recv, wg, wu, wd, my_counts.reshape(m * E_loc),
+            jnp.tile(jnp.arange(E_loc, dtype=jnp.int32), m))
+
+        # Combine leg: the receive layout (grouped by source) is exactly
+        # the send layout of the reverse transfer, so rows come back in
+        # the order this shard sent them (ascending expert id).
+        back = ring_ragged_all_to_all(
+            ys, recv_sizes, send_sizes, "model",
+            chunk_rows=Rm, out_rows=Rm)                         # (Rm, d)
+
+        gs = gates.reshape(Rm)[order]
+        y_my = jnp.zeros((Tm, d), F32).at[tok_idx].add(
+            back.astype(F32) * gs[:, None])
+        y = jax.lax.all_gather(y_my, "model", axis=0, tiled=True)
+        return y[:T].reshape(B_loc, S, d).astype(x.dtype)
+
+    out = shard_map_compat(
+        body, mesh,
+        in_specs=(x_spec, P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=x_spec,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return constrain(out, ("batch", "seq", "embed"))
 
 
 # ========================================================= capacity dispatch
 def _capacity(tokens: int, cfg: MoEConfig) -> int:
-    """True per-row expert capacity: ceil(S*k/E * capacity_factor),
+    """True per-row expert capacity: ceil(S*k/E_live * capacity_factor),
     floored at ``top_k``.
 
-    The floor is the explicit, documented minimum (a row can always place
-    one full token's worth of picks) that replaces the old magic
-    ``max(8, ...)``, which silently overrode ``capacity_factor`` at small
-    S.  Above the floor, ``capacity_factor`` is honored exactly; buffer
-    padding is layout-only (see ``_padded_capacity``)."""
+    The divisor is the *live* expert count: ep padding experts are masked
+    to zero routing probability, so budgeting capacity over
+    ``padded_experts`` silently shrank every live expert's slots to
+    ~n_experts/padded_experts of what ``capacity_factor`` promises (40
+    experts padded to 48 lost 17%).  The floor is the explicit, documented
+    minimum (a row can always place one full token's worth of picks) that
+    replaces the old magic ``max(8, ...)``; above it ``capacity_factor``
+    is honored exactly, and buffer padding is layout-only (see
+    ``_padded_capacity``)."""
     assert cfg.capacity_factor > 0, cfg.capacity_factor
-    cap = int(np.ceil(tokens * cfg.top_k / cfg.padded_experts
+    cap = int(np.ceil(tokens * cfg.top_k / cfg.n_experts
                       * cfg.capacity_factor))
     return max(cap, cfg.top_k)
 
@@ -236,12 +448,18 @@ def _moe_capacity(p, x, cfg: MoEConfig):
 def moe(p, x, cfg: MoEConfig, dispatch: Optional[str] = None):
     """x: (B, S, d) -> (B, S, d).
 
-    ``dispatch`` overrides ``cfg.effective_dispatch`` (tests / benchmarks);
-    production callers leave it None and get dropless unless the config pins
-    the capacity path (ep mode).
+    ``dispatch`` overrides ``cfg.dispatch`` (tests / benchmarks);
+    production callers leave it None and get dropless.  ep parallelism on
+    an active multi-device mesh takes the ragged all-to-all shard_map
+    path; without one (single device, CPU smoke tests) the flat dropless
+    layout already computes the identical padded-expert function (dead
+    experts receive no rows), so the two agree exactly.
     """
-    mode = dispatch if dispatch is not None else cfg.effective_dispatch
+    mode = dispatch if dispatch is not None else cfg.dispatch
     if mode == "dropless":
+        mesh = _ep_mesh(cfg)
+        if mesh is not None:
+            return _moe_dropless_ep(p, x, cfg, mesh)
         return _moe_dropless(p, x, cfg)
     assert mode == "capacity", mode
     return _moe_capacity(p, x, cfg)

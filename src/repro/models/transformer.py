@@ -83,6 +83,7 @@ class Model:
                 top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
                 dispatch=cfg.moe_dispatch,
                 parallelism=cfg.moe_parallelism,
+                ep_axis_size=cfg.moe_ep_axis_size,
             )
         if cfg.family == "hybrid":
             self.ssm_cfg = SSMConfig(

@@ -31,6 +31,7 @@ from ..core import TPU_V5E, GuidanceConfig, GuidanceRuntime, HardwareModel, Move
 from ..core.fragmentation import ChunkStats
 from ..core.profiler import ArenaProfile, IntervalProfile
 from ..core.runtime import MigrationPlan
+from ..dist.sharding import active_mesh
 from ..models.layers import lm_head, mlp, rmsnorm, rope
 from ..models.moe import moe_decode
 from ..models.transformer import Model
@@ -155,6 +156,13 @@ class Engine:
                  hw: HardwareModel = TPU_V5E):
         assert model.cfg.family in ("dense", "moe"), \
             "paged engine serves decoder LMs"
+        if model.cfg.family == "moe" and model.cfg.moe_parallelism == "ep":
+            # Fail at construction, not mid-decode: an ep pad target that
+            # doesn't divide over the live mesh's model axis would otherwise
+            # surface as a shape error deep inside the jitted step.
+            mesh = active_mesh()
+            if mesh is not None and "model" in mesh.shape:
+                model.moe_cfg.validate_ep_axis(int(mesh.shape["model"]))
         self.model = model
         self.params = params
         self.cfg = cfg

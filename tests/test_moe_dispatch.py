@@ -9,6 +9,8 @@ the Pallas grouped-expert GEMM is swept against the jnp oracle on
 randomized ragged group sizes including empty groups.
 """
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -20,6 +22,7 @@ from repro.models.common import init_params
 from repro.models.moe import (
     MoEConfig,
     _capacity,
+    _moe_dropless,
     _padded_capacity,
     moe,
     moe_decode,
@@ -146,10 +149,85 @@ def test_capacity_floor_honors_capacity_factor():
     assert _padded_capacity(9) == 16
 
 
-def test_ep_config_pins_capacity_dispatch():
+def test_capacity_budgets_over_live_experts_not_padding():
+    """Regression: ep padding experts are routing-dead, so capacity divides
+    by the live expert count.  Dividing by padded_experts silently cut
+    every live expert's slots to ~n/padded of the capacity_factor promise
+    (6->8 experts lost 25%; granite's 40->48 lost 17%)."""
+    cfg = make_cfg(top_k=2, n_experts=6, parallelism="ep")   # padded to 8
+    assert cfg.padded_experts == 8
+    assert _capacity(8, cfg) == 3          # ceil(8*2/6), NOT ceil(8*2/8)=2
+    big = MoEConfig(d_model=8, d_ff=8, n_experts=40, top_k=1,
+                    parallelism="ep", ep_axis_size=16)       # padded to 48
+    assert big.padded_experts == 48
+    assert _capacity(96, big) == 3         # ceil(96/40), NOT ceil(96/48)=2
+    # tp (no padding) is unchanged.
+    assert _capacity(16, make_cfg(top_k=2, n_experts=8)) == 4
+
+
+def test_ep_no_longer_pins_capacity_and_validates_axis():
+    """ep defaults to dropless like every other config, and the config's
+    pad target is validated against the mesh's model-axis size at call
+    sites instead of being silently trusted."""
     cfg = make_cfg(parallelism="ep")
-    assert cfg.effective_dispatch == "capacity"
-    assert make_cfg(parallelism="tp").effective_dispatch == "dropless"
+    assert cfg.dispatch == "dropless"
+    assert cfg.padded_experts == 8                     # 6 -> 8 (axis 4)
+    cfg.validate_ep_axis(4)                            # 8 % 4 == 0: fine
+    cfg.validate_ep_axis(2)
+    with pytest.raises(ValueError, match="ep mesh mismatch"):
+        cfg.validate_ep_axis(3)
+    with pytest.raises(ValueError, match="ep mesh mismatch"):
+        # pad target 2 -> 6 padded experts, indivisible over a 4-way axis
+        dataclasses.replace(cfg, ep_axis_size=2).validate_ep_axis(4)
+    # tp configs never validate (no padding, no expert sharding).
+    make_cfg(parallelism="tp").validate_ep_axis(7)
+
+
+@pytest.mark.parametrize("parallelism", ["tp", "ep"])
+def test_dropless_layouts_agree(parallelism):
+    """The flat (E-group) and per-row (B*E-group) segment layouts compute
+    the identical function — the layout is a locality/grid trade chosen
+    from the ambient mesh, never a semantic one."""
+    cfg = make_cfg(top_k=2, parallelism=parallelism)
+    p = f32_params(cfg)
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(3, 8, cfg.d_model)), F32)
+    y_flat = _moe_dropless(p, x, cfg, per_row=False)
+    y_row = _moe_dropless(p, x, cfg, per_row=True)
+    np.testing.assert_allclose(np.asarray(y_row), np.asarray(y_flat),
+                               atol=1e-6, rtol=1e-6)
+
+
+@pytest.mark.parametrize("parallelism", ["tp", "ep"])
+def test_dropless_matches_per_token_oracle(parallelism):
+    """The per-row sorted dispatch computes exactly sum_k gate_k *
+    SwiGLU_{e_k}(x_t) per token — checked against a direct per-token loop,
+    so the sort/scatter plumbing (and the B*E-group GEMM layout) cannot
+    silently permute or drop a contribution."""
+    cfg = make_cfg(top_k=2, parallelism=parallelism)
+    p = f32_params(cfg)
+    rng = np.random.default_rng(5)
+    B, S = 2, 9
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), F32)
+    got = np.asarray(moe(p, x, cfg, dispatch="dropless"))
+
+    gates, experts = route_tokens(
+        p["router"], x.reshape(B * S, cfg.d_model), cfg)
+    gates, experts = np.asarray(gates), np.asarray(experts)
+    wg, wu, wd = (np.asarray(p[n]) for n in ("w_gate", "w_up", "w_down"))
+    xt = np.asarray(x).reshape(B * S, cfg.d_model)
+
+    def silu(a):
+        return a / (1.0 + np.exp(-a))
+
+    want = np.zeros_like(xt)
+    for t in range(B * S):
+        for j in range(cfg.top_k):
+            e = int(experts[t, j])
+            h = silu(xt[t] @ wg[e]) * (xt[t] @ wu[e])
+            want[t] += gates[t, j] * (h @ wd[e])
+    np.testing.assert_allclose(got.reshape(B * S, -1), want,
+                               atol=1e-4, rtol=1e-4)
 
 
 def test_dropless_is_differentiable():
@@ -213,6 +291,49 @@ def test_grouped_gemm_grad_matches_reference():
     for a, b in zip(g_kernel, g_ref):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_grouped_gemm_group_experts_mapping(seed):
+    """G > E groups with a group->expert weight map (the per-batch-row and
+    ragged-ep layouts): Pallas (interpret) and the jnp oracle both honor
+    the mapping, checked against a direct numpy per-segment computation."""
+    rng = np.random.default_rng(10 + seed)
+    E, G, d, f = 3, 8, 32, 48
+    sizes = rng.integers(0, 20, G)
+    sizes[rng.integers(0, G)] = 0
+    T = max(int(sizes.sum()), 1)
+    if sizes.sum() == 0:
+        sizes[0] = T
+    gexp = rng.integers(0, E, G).astype(np.int32)
+    x = jnp.asarray(rng.normal(size=(T, d)), jnp.float32)
+    wg = jnp.asarray(rng.normal(size=(E, d, f)) * 0.1, jnp.float32)
+    wu = jnp.asarray(rng.normal(size=(E, d, f)) * 0.1, jnp.float32)
+    wd = jnp.asarray(rng.normal(size=(E, f, d)) * 0.1, jnp.float32)
+    gs = jnp.asarray(sizes, jnp.int32)
+    ge = jnp.asarray(gexp)
+
+    got_pal = moe_grouped_ffn_pallas(x, wg, wu, wd, gs, ge, block_t=16,
+                                     block_f=32, interpret=True)
+    got_ref = ref.moe_grouped_ffn_reference(x, wg, wu, wd, gs, ge)
+
+    def silu(a):
+        return a / (1.0 + np.exp(-a))
+
+    xn = np.asarray(x)
+    want = np.zeros((T, d), np.float32)
+    row = 0
+    for g in range(G):
+        e = int(gexp[g])
+        for _ in range(int(sizes[g])):
+            h = silu(xn[row] @ np.asarray(wg)[e]) * (xn[row]
+                                                    @ np.asarray(wu)[e])
+            want[row] = h @ np.asarray(wd)[e]
+            row += 1
+    np.testing.assert_allclose(np.asarray(got_ref), want, atol=1e-5,
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_pal), want, atol=1e-5,
+                               rtol=1e-5)
 
 
 @pytest.mark.parametrize("seed", range(6))
