@@ -1,7 +1,10 @@
 """Serving-engine benchmark: guided KV-page tiering (the paper's technique
 applied to serving) vs LRU/FIFO eviction on a multi-session workload with an
-HBM page budget.  ``derived`` = page-swap bytes moved (lower is better) for
-swap rows, and modeled step time (PCIe swaps + decode) for time rows."""
+HBM page budget, plus a prefill-throughput case comparing one-shot paged
+prefill (a single jitted dispatch per prompt) against the chunked per-token
+oracle.  ``derived`` = page-swap bytes moved (lower is better) for swap
+rows, modeled step time (PCIe swaps + decode) for time rows, prompt tokens/s
+for prefill-throughput rows and seconds for time-to-first-token rows."""
 
 from __future__ import annotations
 
@@ -13,20 +16,25 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.core import TPU_V5E
-from repro.launch.analysis import guidance_summary
+from repro.launch.analysis import serving_summary
 from repro.models import build_model
 from repro.serve import Engine, ServeConfig
 
 from .common import emit
 
 
+def _smoke_model():
+    cfg = dataclasses.replace(get_smoke("llama3_2_1b"), remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
 def session_workload(policy: str, rounds: int = 10):
     """Hot multi-turn sessions + periodic one-shot 'scan' sessions (long
     prompt, generated once, never resumed) — the access pattern where
     frequency-aware guidance must resist cache pollution."""
-    cfg = dataclasses.replace(get_smoke("llama3_2_1b"), remat=False)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    cfg, model, params = _smoke_model()
     eng = Engine(model, params, ServeConfig(
         max_batch=2, page_size=4, hbm_pages=12, host_pages=160,
         policy=policy, interval_steps=4))
@@ -56,31 +64,74 @@ def session_workload(policy: str, rounds: int = 10):
             if eng.requests[rid].state == "active":
                 eng.pause(rid)
     wall = time.perf_counter() - t0
-    guidance = (guidance_summary(eng.runtime.events)
-                if eng.runtime is not None else None)
-    return eng.stats(), wall, guidance
+    return serving_summary(eng), wall
+
+
+def prefill_throughput(mode: str, prompt_len: int):
+    """Prompt-ingestion cost for one prefill mode: prompt tokens/s of the
+    ingest itself and wall-clock time-to-first-token (ingest + one decode
+    step), measured after a warm-up request compiles both paths."""
+    _, model, params = _smoke_model()
+    eng = Engine(model, params, ServeConfig(
+        max_batch=2, page_size=4, hbm_pages=64, host_pages=64,
+        policy="gdt", interval_steps=8, prefill=mode,
+        max_pages_per_seq=max(32, prompt_len // 4 + 2)))
+    rng = np.random.default_rng(1)
+    warm = [int(t) for t in rng.integers(1, 256, prompt_len)]
+    eng.add_request(0, warm, max_new=1)           # compile
+    while 0 in eng.requests:
+        eng.step()
+    prompt = [int(t) for t in rng.integers(1, 256, prompt_len)]
+    d0 = eng.prefill_dispatches
+    t0 = time.perf_counter()
+    eng.add_request(1, prompt, max_new=2)
+    # Block on the KV pools: the one-shot path is a single async jitted
+    # dispatch, so without a sync the timer would measure dispatch
+    # overhead, not the ingest itself (chunked syncs every token anyway).
+    jax.block_until_ready((eng.pool.k_hbm, eng.pool.v_hbm))
+    t_ingest = time.perf_counter() - t0
+    first = None
+    while first is None:
+        out = eng.step()
+        first = out.get(1)
+    ttft = time.perf_counter() - t0
+    dispatches = eng.prefill_dispatches - d0
+    tokens_per_s = (prompt_len - 1) / t_ingest if t_ingest else float("inf")
+    return tokens_per_s, ttft, dispatches, t_ingest
 
 
 def run(quick: bool = False):
     rows = []
     pcie = TPU_V5E.slow.read_bw_GBps * 1e9
     for policy in ("gdt", "lru", "fifo"):
-        stats, wall, guidance = session_workload(
-            policy, rounds=6 if quick else 10)
-        swap_s = stats["bytes_moved"] / pcie
-        rows.append((f"serve/{policy}/swap_bytes", wall * 1e6,
-                     stats["bytes_moved"]))
+        summary, wall = session_workload(policy, rounds=6 if quick else 10)
+        bytes_moved = summary["engine_bytes_moved"]
+        swap_s = bytes_moved / pcie
+        rows.append((f"serve/{policy}/swap_bytes", wall * 1e6, bytes_moved))
         rows.append((f"serve/{policy}/swap_ins", wall * 1e6,
-                     stats["swap_ins"]))
+                     summary["engine_swap_ins"]))
         rows.append((f"serve/{policy}/modeled_swap_seconds", wall * 1e6,
                      swap_s))
-        if guidance is not None:  # the controller's own event stream
+        rows.append((f"serve/{policy}/transfer_events", wall * 1e6,
+                     summary["engine_transfer_events"]))
+        rows.append((f"serve/{policy}/preemptions", wall * 1e6,
+                     summary["engine_preemptions"]))
+        if "migrations" in summary:  # the controller's own event stream
             rows.append((f"serve/{policy}/guided_migrations", wall * 1e6,
-                         guidance["migrations"]))
+                         summary["migrations"]))
             rows.append((f"serve/{policy}/guided_rental_bytes", wall * 1e6,
-                         guidance["rental_bytes"]))
+                         summary["rental_bytes"]))
             rows.append((f"serve/{policy}/dropped_promotions", wall * 1e6,
-                         guidance["dropped_promotions"]))
+                         summary["dropped_promotions"]))
+    prompt_len = 32 if quick else 96
+    for mode in ("one_shot", "chunked"):
+        tps, ttft, dispatches, t_ingest = prefill_throughput(mode, prompt_len)
+        rows.append((f"serve/prefill/{mode}/tokens_per_s",
+                     t_ingest * 1e6, tps))
+        rows.append((f"serve/prefill/{mode}/ttft_seconds",
+                     ttft * 1e6, ttft))
+        rows.append((f"serve/prefill/{mode}/dispatches",
+                     t_ingest * 1e6, dispatches))
     return emit(rows)
 
 

@@ -27,8 +27,9 @@ BENCHES = {
 }
 
 # Smallest set that exercises every Algorithm-1 backend (simulator, paged
-# KV serving, trainer arenas) plus the Pallas kernel sweep (grouped-expert
-# GEMM included) — the CI job that keeps perf scripts alive.
+# KV serving — including the one-shot vs chunked prefill-throughput case —
+# trainer arenas) plus the Pallas kernel sweep (grouped-expert GEMM
+# included) — the CI job that keeps perf scripts alive.
 SMOKE_GROUPS = ("fig7", "serve", "train", "kernels")
 
 

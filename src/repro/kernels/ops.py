@@ -58,6 +58,27 @@ def paged_attention(q, k_pool, v_pool, page_table, lengths,
                                   interpret=(mode == "interpret"))
 
 
+def paged_prefill(q, k_pool, v_pool, page_table, lengths,
+                  window: Optional[int] = None):
+    """One-shot prompt attention over paged KV: the S prompt tokens of one
+    sequence attend as S query rows over a shared page table, with row t's
+    causal visibility carried by ``lengths[t]`` (0 disables a padded row).
+    Both lowerings reuse the decode paged-attention math, so a whole-prompt
+    prefill is bitwise-equal to stepping its tokens through decode.
+
+    q: (S,H,dh); k_pool/v_pool: (N,P,K,dh); page_table: (MP,) int32;
+    lengths: (S,) int32.  Returns (S,H,dh)."""
+    mode = current_mode()
+    if mode == "reference":
+        return ref.paged_prefill_reference(q, k_pool, v_pool, page_table,
+                                           lengths, window=window)
+    from .paged_attention import paged_prefill_pallas
+
+    return paged_prefill_pallas(q, k_pool, v_pool, page_table, lengths,
+                                window=window,
+                                interpret=(mode == "interpret"))
+
+
 def moe_grouped_ffn(x, w_gate, w_up, w_down, group_sizes,
                     group_experts=None):
     """Grouped-expert SwiGLU over sorted ragged segments (dropless MoE

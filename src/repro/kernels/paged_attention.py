@@ -92,6 +92,24 @@ def _kernel(table_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
 
 @functools.partial(
     jax.jit, static_argnames=("window", "interpret"))
+def paged_prefill_pallas(q, k_pool, v_pool, page_table, lengths,
+                         window: Optional[int] = None,
+                         interpret: bool = False):
+    """One-shot prompt attention: S query rows of one sequence over a
+    shared page table, causality via per-row ``lengths``.  Reuses the
+    decode kernel with the table broadcast across rows — grid (S, MP) —
+    so the accumulation order per row is identical to decode's and the
+    result is bitwise-equal to chunked per-token ingestion.
+
+    q: (S,H,dh); page_table: (MP,) int32; lengths: (S,) int32."""
+    S = q.shape[0]
+    table = jnp.broadcast_to(page_table[None, :], (S, page_table.shape[0]))
+    return paged_attention_pallas(q, k_pool, v_pool, table, lengths,
+                                  window=window, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "interpret"))
 def paged_attention_pallas(q, k_pool, v_pool, page_table, lengths,
                            window: Optional[int] = None,
                            interpret: bool = False):

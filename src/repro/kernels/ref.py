@@ -74,6 +74,27 @@ def paged_attention_reference(q, k_pool, v_pool, page_table, lengths,
     return o.reshape(B, H, dh).astype(q.dtype)
 
 
+def paged_prefill_reference(q, k_pool, v_pool, page_table, lengths,
+                            window: Optional[int] = None) -> jax.Array:
+    """One-shot prompt attention over paged KV — masked-einsum oracle.
+
+    The S prompt tokens of ONE sequence are presented as S independent
+    query rows over the same page table; row t's causal visibility is
+    expressed through ``lengths[t]`` (= t+1 for real tokens, 0 for padded
+    rows).  Delegates to the decode oracle with the table broadcast across
+    rows, so a one-shot prefill computes bitwise the same function as
+    stepping the tokens through decode one at a time — the property the
+    serving engine's chunked-prefill equality tests pin down.
+
+    q: (S, H, dh); k_pool/v_pool: (N, P, K, dh); page_table: (MP,) int32
+    (-1 = unused); lengths: (S,) int32.  Returns (S, H, dh).
+    """
+    S = q.shape[0]
+    table = jnp.broadcast_to(page_table[None, :], (S, page_table.shape[0]))
+    return paged_attention_reference(q, k_pool, v_pool, table, lengths,
+                                     window=window)
+
+
 # ---------------------------------------------------- grouped-expert GEMM
 def moe_grouped_ffn_reference(x, w_gate, w_up, w_down, group_sizes,
                               group_experts=None):

@@ -63,6 +63,22 @@ def guidance_summary(events: Iterable[Any]) -> Dict[str, float]:
     }
 
 
+def serving_summary(engine) -> Dict[str, float]:
+    """One view over the serving engine's scheduler/migration counters and
+    (when guided) the controller's event stream.
+
+    Engine-side scalars are prefixed ``engine_`` (swap and transfer probes,
+    prefill dispatch/token counts, admission/preemption/starvation totals);
+    guidance scalars keep the ``guidance_summary`` names.  Benchmarks and
+    reports read serving telemetry through this function rather than poking
+    at per-subsystem counters.
+    """
+    out = {f"engine_{k}": float(v) for k, v in engine.stats().items()}
+    if getattr(engine, "runtime", None) is not None:
+        out.update(guidance_summary(engine.runtime.events))
+    return out
+
+
 # ============================================================ jaxpr costs
 _DTYPE_BYTES = {"pred": 1}
 

@@ -1,27 +1,50 @@
-"""Batched serving engine with guided KV-page tiering.
+"""Continuous-batching serving engine with guided KV-page tiering.
 
 The engine serves dense/MoE decoder models from a paged two-tier KV cache
 (serve/kvcache.py).  Each *request* is an allocation site; its pages are the
-chunks.  Every decode step the engine (a) schedules up to ``max_batch``
-active requests, (b) ensures their pages are HBM-resident — swap-ins are the
-rental the controller pays for wrong placement, (c) runs the jitted paged
-decode step, (d) updates exact per-page access counts.
+chunks.  The request lifecycle is explicit:
+
+    waiting --admit--> active <--pause/resume--> paused --preempt--> waiting
+                          \\------------------ finish ------------> finished
+
+* **Admission** is FIFO from a wait queue: a request is admitted when its
+  prompt's pages fit the pool's free logical capacity (no raw ``IndexError``
+  / ``MemoryError`` escapes for work that merely has to wait).  Requests
+  that can *never* run — prompt + generation budget past
+  ``max_pages_per_seq * page_size``, or a prompt bigger than the usable HBM
+  pool — are rejected at ``add_request`` with an error naming the knob.
+* **Prefill** is one-shot: a single jitted dispatch writes the whole
+  prompt's K/V directly into page-table slots and attends with per-token
+  causal lengths (``kernels.ops.paged_prefill``).  The chunked path
+  (``prefill="chunked"``: step the prompt through decode one token at a
+  time) survives as the bitwise-equality oracle.
+* **Scheduling** each step packs up to ``max_batch`` active requests by
+  last-scheduled age under two budgets — usable HBM slots and free logical
+  pages — so a batch can always be made resident without evicting its own
+  members; requests that do not fit are starved this step, not crashed.
+* **Preemption**: paused requests can lose their pages entirely (preempt by
+  recompute — deterministic re-prefill of prompt+generated on resume makes
+  this lossless, *because* one-shot prefill == decode bitwise) when the
+  wait-queue head needs logical pages.
+* **Finish** frees pages, prunes the request from ``engine.requests`` and
+  its pages from the eviction policy's ``last_recs`` view; results move to
+  ``engine.finished`` (drain with ``pop_finished``).
 
 Algorithm 1 itself is NOT implemented here: the engine exposes its page pool
 to the shared controller through ``PagedKVBackend`` (a
 ``core.runtime.TierBackend``) and a ``GuidanceRuntime`` drives the paper's
 machinery — profile -> age-fragmented thermos -> ski-rental -> page
-migrations — at the decision interval.
-
-Eviction between intervals (when a swap-in needs a free slot) is a
-first-class policy object (serve/eviction.py): ``gdt`` follows the last
-enforced recommendation; ``lru`` and ``fifo`` are selectable baselines.
+migrations — at the decision interval.  All page movement (enforcement,
+demand residency, eviction) goes through the pool's batched
+``swap_in_many``/``swap_out_many``, so an N-page migration costs a constant
+number of host<->device transfers per direction.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Optional, Sequence
+from collections import deque
+from typing import Deque, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +79,13 @@ class ServeConfig:
     # interval so placement tracks recent behaviour (sessions pause/resume
     # far faster than HPC phase shifts, so serving defaults to decaying).
     access_decay: float = 0.5
+    # Prompt ingestion: "one_shot" = single jitted dispatch per prompt;
+    # "chunked" = step prompt tokens through decode (the bitwise oracle).
+    prefill: str = "one_shot"
+    # Debug: copy every scheduled row's logits to host into
+    # ``engine.last_logits`` (a full (B, vocab) transfer per step — keep
+    # off on the decode hot path; the parity tests turn it on).
+    keep_logits: bool = False
 
 
 @dataclasses.dataclass
@@ -64,9 +94,16 @@ class Request:
     tokens: List[int]
     max_new: int
     generated: List[int] = dataclasses.field(default_factory=list)
-    state: str = "active"          # active | paused | finished
+    state: str = "waiting"   # waiting | active | paused | preempted | finished
     pos: int = 0                   # tokens written to KV so far
     last_scheduled: int = 0
+    truncated: bool = False        # finished early for capacity, not EOS
+
+    @property
+    def context(self) -> List[int]:
+        """Prompt + everything generated so far — what a (re-)prefill must
+        ingest (minus the final token, which the next decode step feeds)."""
+        return self.tokens + self.generated
 
 
 class PagedKVBackend:
@@ -77,7 +114,8 @@ class PagedKVBackend:
     demotions run first, and promotions that would exceed the free HBM slots
     are *refused* — and reflected back into ``last_recs`` so the eviction
     policy sees the placement that actually exists, not the one that was
-    merely planned.
+    merely planned.  Each direction is realized as ONE batched pool
+    migration, not a per-page loop.
     """
 
     name = "paged_kv"
@@ -119,8 +157,11 @@ class PagedKVBackend:
         return self._telemetry
 
     def reweight(self, decay: float) -> None:
+        # Float counters: int(1 * 0.5) would zero any page with a single
+        # access per interval, erasing the recency ordering decay exists to
+        # preserve.
         for p in self.pool.pages.values():
-            p.accesses = int(p.accesses * decay)
+            p.accesses = p.accesses * decay
 
     def on_plan(self, plan: MigrationPlan) -> None:
         # Track the plan every interval (even when the break-even rule says
@@ -131,21 +172,29 @@ class PagedKVBackend:
         stats = MoveStats()
         pages = self.pool.pages
         page_bytes = self.pool.page_bytes
-        # Demotions first: free slots for the promotions below.
-        for pid, fast in plan.chunk_placement.items():
-            if not fast and pid in pages and pages[pid].hbm_slot is not None:
-                self.pool.swap_out(pid)
-                stats.bytes_demoted += page_bytes
-        # Promotions, bounded by the actually-free HBM slots.
-        for pid, fast in plan.chunk_placement.items():
-            if fast and pid in pages and pages[pid].hbm_slot is None:
-                if self.pool.free_hbm:
-                    self.pool.swap_in(pid)
-                    stats.bytes_promoted += page_bytes
-                else:
-                    stats.dropped_promotions += 1
-                    self.last_recs[pid] = False
+        # Demotions first (one batched transfer): free slots for promotions.
+        demote = [pid for pid, fast in plan.chunk_placement.items()
+                  if not fast and pid in pages
+                  and pages[pid].hbm_slot is not None]
+        self.pool.swap_out_many(demote)
+        stats.bytes_demoted = page_bytes * len(demote)
+        # Promotions (one batched transfer), bounded by free HBM slots.
+        want = [pid for pid, fast in plan.chunk_placement.items()
+                if fast and pid in pages and pages[pid].hbm_slot is None]
+        room = len(self.pool.free_hbm)
+        promote, refused = want[:room], want[room:]
+        self.pool.swap_in_many(promote)
+        stats.bytes_promoted = page_bytes * len(promote)
+        for pid in refused:
+            stats.dropped_promotions += 1
+            self.last_recs[pid] = False
         return stats
+
+    def forget_pages(self, page_ids: Sequence[int]) -> None:
+        """Drop freed pages from the recommendation view so ``last_recs``
+        never accumulates stale ids across request generations."""
+        for pid in page_ids:
+            self.last_recs.pop(pid, None)
 
     def fast_bytes(self) -> int:
         return self.pool.hbm_used() * self.pool.page_bytes
@@ -163,6 +212,10 @@ class Engine:
             mesh = active_mesh()
             if mesh is not None and "model" in mesh.shape:
                 model.moe_cfg.validate_ep_axis(int(mesh.shape["model"]))
+        if cfg.prefill not in ("one_shot", "chunked"):
+            raise ValueError(
+                f"ServeConfig.prefill must be 'one_shot' or 'chunked', "
+                f"got {cfg.prefill!r}")
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -174,6 +227,8 @@ class Engine:
             hbm_pages=cfg.hbm_pages, host_pages=cfg.host_pages,
             dtype=mc.dtype)
         self.requests: Dict[int, Request] = {}
+        self.finished: Dict[int, Request] = {}
+        self.wait_queue: Deque[int] = deque()
         self.step_count = 0
         self.eviction = make_eviction_policy(cfg.policy)
         # Reserve one HBM slot as the write target for inactive batch rows,
@@ -196,7 +251,16 @@ class Engine:
                     skip_empty_intervals=True),
                 clock=lambda: self.step_count)
         self._decode = jax.jit(self._build_decode())
+        self._prefill = jax.jit(self._build_prefill())
+        self.last_logits: Dict[int, np.ndarray] = {}
+        # --------------------------------------------------- counters
         self.swap_in_events = 0
+        self.prefill_dispatches = 0    # jitted dispatches spent on prefill
+        self.prefill_tokens = 0        # prompt tokens ingested
+        self.admissions = 0
+        self.preemptions = 0           # paused requests evicted wholesale
+        self.starved_steps = 0         # request-steps skipped for capacity
+        self.truncations = 0           # requests finished early for capacity
 
     # ------------------------------------------------- telemetry shims
     @property
@@ -209,140 +273,427 @@ class Engine:
     def last_recs(self) -> Dict[int, bool]:
         return self.kv_backend.last_recs if self.kv_backend is not None else {}
 
+    @property
+    def usable_hbm_pages(self) -> int:
+        return self.cfg.hbm_pages - 1          # minus the scratch slot
+
+    def free_logical_pages(self) -> int:
+        """Unallocated pages across both tiers — what admission/allocation
+        budgets against."""
+        return len(self.pool.free_hbm) + len(self.pool.free_host)
+
+    # ================================================== shared layer body
+    def _layer_body(self, lp, x, kp, vp, *, positions, write_slot,
+                    write_off, row_mask, lane_mask, rows, unrows, attend):
+        """ONE transformer layer body shared by the jitted decode and
+        one-shot prefill closures — a single definition is what keeps
+        one-shot prefill bitwise-equal to decode (the invariant
+        preemption-by-recompute losslessness rests on).
+
+        The two paths differ only in where the row axis lives (decode:
+        batch of B single-token rows, x (B,1,d); prefill: one sequence of
+        S token rows, x (1,S,d)) and in the attention call.  ``rows``
+        flattens a (.., ., H, dh) projection to (R, H, dh), ``unrows``
+        lifts an (R, d) result back to x's layout, ``attend(q, kp, vp)``
+        returns (R, H, dh).  Masked rows scatter zeros to the reserved
+        scratch slot and carry zero residuals — deterministic, never
+        garbage.
+        """
+        model = self.model
+        acfg = model.attn_cfg
+        h = rmsnorm(lp["ln1"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+        k1 = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+        v1 = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+        q = rope(q, positions, acfg.rope_theta)
+        k1 = rope(k1, positions, acfg.rope_theta)
+        m = row_mask[:, None, None]
+        kp = kp.at[write_slot, write_off].set(
+            jnp.where(m, rows(k1), 0).astype(kp.dtype))
+        vp = vp.at[write_slot, write_off].set(
+            jnp.where(m, rows(v1), 0).astype(vp.dtype))
+        o = attend(rows(q), kp, vp)                      # (R, H, dh)
+        y = jnp.einsum("rhk,hkd->rd",
+                       o.reshape(o.shape[0], acfg.n_heads, acfg.head_dim),
+                       lp["attn"]["wo"])
+        x = x + jnp.where(lane_mask, unrows(y), 0)
+        h2 = rmsnorm(lp["ln2"], x)
+        if model.cfg.family == "moe":
+            # Same dropless routing + grouped GEMM as model.prefill, so a
+            # token's expert assignment never depends on how the stream is
+            # chunked or batched.
+            d = moe_decode(lp["moe"], h2, model.moe_cfg)
+        else:
+            d = mlp(lp["mlp"], h2)
+        x = x + jnp.where(lane_mask, d, 0)
+        return x, kp, vp
+
     # ========================================================= jit decode
     def _build_decode(self):
-        model, cfg = self.model, self.cfg
-        mc = model.cfg
+        model = self.model
         acfg = model.attn_cfg
-        K, dh = mc.kv_heads, acfg.head_dim
-        P = cfg.page_size
         from ..kernels.ops import paged_attention
 
         def step(params, k_pool, v_pool, tokens, page_table, lengths,
                  write_slot, write_off, active):
             """tokens: (B,1); page_table: (B,MP) HBM slots or -1;
             lengths: (B,) incl. new token; write_slot/off: (B,) where the
-            new token's KV goes; active: (B,) bool."""
+            new token's KV goes; active: (B,) bool — inactive rows are
+            masked to deterministic zeros rather than carrying garbage."""
             x = jnp.take(params["embed"]["tok"], tokens, axis=0)  # (B,1,d)
 
             def body(carry, xs):
-                x = carry
                 lp, kp, vp = xs          # kp/vp: (N,P,K,dh)
-                h = rmsnorm(lp["ln1"], x)
-                B = h.shape[0]
-                q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])[:, 0]
-                k1 = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])[:, 0]
-                v1 = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])[:, 0]
-                posn = (lengths - 1)[:, None]
-                q = rope(q[:, None], posn, acfg.rope_theta)[:, 0]
-                k1 = rope(k1[:, None], posn, acfg.rope_theta)[:, 0]
-                # Inactive rows target the reserved scratch slot, so the
-                # batched scatter is always collision-free.
-                kp = kp.at[write_slot, write_off].set(k1.astype(kp.dtype))
-                vp = vp.at[write_slot, write_off].set(v1.astype(vp.dtype))
-                o = paged_attention(q, kp, vp, page_table, lengths,
-                                    window=acfg.window)
-                y = jnp.einsum("bhk,hkd->bd", o.reshape(B, acfg.n_heads, dh),
-                               lp["attn"]["wo"])[:, None]
-                x = x + y
-                h2 = rmsnorm(lp["ln2"], x)
-                if mc.family == "moe":
-                    # Same dropless routing + grouped GEMM as model.prefill,
-                    # so the engine's chunked prefill (prompt tokens stepped
-                    # through this path) computes the identical function.
-                    x = x + moe_decode(lp["moe"], h2, model.moe_cfg)
-                else:
-                    x = x + mlp(lp["mlp"], h2)
+                x, kp, vp = self._layer_body(
+                    lp, carry, kp, vp,
+                    positions=(lengths - 1)[:, None],
+                    write_slot=write_slot, write_off=write_off,
+                    row_mask=active, lane_mask=active[:, None, None],
+                    rows=lambda t: t[:, 0], unrows=lambda y: y[:, None],
+                    attend=lambda q, kp, vp: paged_attention(
+                        q, kp, vp, page_table, lengths, window=acfg.window))
                 return x, (kp, vp)
 
             x, (nk, nv) = jax.lax.scan(
                 body, x, (params["layers"], k_pool, v_pool))
             x = rmsnorm(params["final_ln"], x)
             logits = lm_head(params["head"], x)[:, 0]
+            logits = jnp.where(active[:, None], logits, 0.0)
             return logits, nk, nv
 
         return step
 
+    # ======================================================== jit prefill
+    def _build_prefill(self):
+        """One-shot prompt ingestion: a single jitted call writes S tokens'
+        K/V into their page-table slots and attends with per-token causal
+        lengths via ``ops.paged_prefill`` — the same layer body decode
+        runs, so the result is bitwise-equal to chunked ingestion."""
+        model = self.model
+        acfg = model.attn_cfg
+        from ..kernels.ops import paged_prefill
+
+        def prefill(params, k_pool, v_pool, tokens, page_table, slots, offs,
+                    n_real):
+            """tokens: (S,) padded prompt; page_table: (MP,) the request's
+            pages; slots/offs: (S,) physical write target per token (the
+            scratch slot for padded rows); n_real: () int32 live prefix."""
+            S = tokens.shape[0]
+            positions = jnp.arange(S, dtype=jnp.int32)
+            valid = positions < n_real
+            lengths = jnp.where(valid, positions + 1, 0)
+            x = jnp.take(params["embed"]["tok"], tokens[None], axis=0)
+
+            def body(carry, xs):
+                lp, kp, vp = xs
+                x, kp, vp = self._layer_body(
+                    lp, carry, kp, vp,
+                    positions=positions[None],
+                    write_slot=slots, write_off=offs,
+                    row_mask=valid, lane_mask=valid[None, :, None],
+                    rows=lambda t: t[0], unrows=lambda y: y[None],
+                    attend=lambda q, kp, vp: paged_prefill(
+                        q, kp, vp, page_table, lengths, window=acfg.window))
+                return x, (kp, vp)
+
+            _, (nk, nv) = jax.lax.scan(
+                body, x, (params["layers"], k_pool, v_pool))
+            return nk, nv
+
+        return prefill
+
     # ========================================================== requests
     def add_request(self, request_id: int, prompt: List[int],
                     max_new: int = 8) -> None:
+        """Validate and enqueue; admission happens immediately if the pool
+        has room, else at a later ``step()``."""
+        if request_id in self.requests or request_id in self.finished:
+            raise ValueError(f"duplicate request_id {request_id}")
+        if not prompt:
+            raise ValueError("empty prompt")
+        P = self.cfg.page_size
+        MP = self.cfg.max_pages_per_seq
+        total_tokens = len(prompt) - 1 + max_new   # tokens written to KV
+        if total_tokens > MP * P:
+            raise ValueError(
+                f"request {request_id} needs {total_tokens} KV tokens "
+                f"({len(prompt)} prompt + {max_new} new) but "
+                f"max_pages_per_seq={MP} * page_size={P} caps a sequence at "
+                f"{MP * P}; raise ServeConfig.max_pages_per_seq or shorten "
+                f"the request")
+        prompt_pages = -(-max(len(prompt) - 1, 1) // P)
+        lifetime_pages = -(-total_tokens // P)
+        if min(prompt_pages + 1, lifetime_pages) > self.usable_hbm_pages:
+            raise ValueError(
+                f"request {request_id}'s prompt needs {prompt_pages} pages "
+                f"(+1 to decode) but only {self.usable_hbm_pages} usable "
+                f"HBM pages exist (hbm_pages={self.cfg.hbm_pages} minus the "
+                f"scratch slot); raise ServeConfig.hbm_pages")
         req = Request(request_id=request_id, tokens=list(prompt),
                       max_new=max_new)
         self.requests[request_id] = req
-        # Chunked prefill: step the prompt tokens through the decode path.
-        # Exact by construction — dropless MoE dispatch and per-token
-        # routing make step-by-step ingestion compute the same function as
-        # batched model.prefill (the contiguous fast path + paginate is a
-        # perf option, not a correctness one, at engine-test scale).  The
-        # last prompt token is fed by the first step(), whose logits
-        # produce the first generated token.
-        for t in prompt[:-1]:
-            self._decode_one(req, t)
+        self.wait_queue.append(request_id)
+        self._admit_waiting()
 
     def pause(self, request_id: int):
-        self.requests[request_id].state = "paused"
+        req = self.requests.get(request_id)
+        if req is not None and req.state == "active":
+            req.state = "paused"
 
     def resume(self, request_id: int):
-        req = self.requests[request_id]
+        req = self.requests.get(request_id)
+        if req is None:
+            return
         if req.state == "paused":
             req.state = "active"
+        elif req.state == "preempted":
+            # Pages were dropped; re-prefill via the admission path (exact:
+            # one-shot prefill == decode bitwise, and decoding is greedy).
+            req.state = "waiting"
+            self.wait_queue.append(request_id)
+            self._admit_waiting()
+
+    def pop_finished(self, request_id: Optional[int] = None):
+        """Drain finished requests (all, or one) so long-lived engines do
+        not accumulate results forever."""
+        if request_id is not None:
+            return self.finished.pop(request_id)
+        out, self.finished = self.finished, {}
+        return out
+
+    # ------------------------------------------------------- admission
+    def _admit_waiting(self):
+        """FIFO admission: admit the queue head while its (re-)prefill
+        pages fit the free logical capacity, preempting paused requests'
+        pages when that unblocks the head."""
+        P = self.cfg.page_size
+        while self.wait_queue:
+            req = self.requests.get(self.wait_queue[0])
+            if req is None or req.state != "waiting":   # cancelled/stale
+                self.wait_queue.popleft()
+                continue
+            n_ingest = len(req.context) - 1
+            n_pages = -(-n_ingest // P) if n_ingest else 0
+            remaining = req.max_new - len(req.generated)
+            pages_total = -(-(n_ingest + remaining) // P)
+            if min(n_pages + 1, pages_total) > self.usable_hbm_pages:
+                # A preempted request whose regenerated context outgrew the
+                # fast tier can never decode again: finish it, don't wedge
+                # the queue head forever.
+                self.wait_queue.popleft()
+                self._finish(req, truncated=True)
+                continue
+            # Admit with one page of growth slack (capped at the request's
+            # real lifetime need), so an admitted request can always decode
+            # at least a page's worth before capacity pressure returns.
+            if min(n_pages + 1, pages_total) > self.free_logical_pages():
+                if not self._preempt_one():
+                    return                      # head waits; FIFO order
+                continue
+            self.wait_queue.popleft()
+            self._prefill_request(req)
+            req.state = "active"
+            req.last_scheduled = self.step_count
+            self.admissions += 1
+
+    def _preempt_one(self) -> bool:
+        """Drop ALL pages of the least-recently-scheduled paused request
+        (preempt by recompute: resume re-prefills prompt+generated)."""
+        victims = [r for r in self.requests.values()
+                   if r.state == "paused"
+                   and self.pool.request_pages(r.request_id)]
+        if not victims:
+            return False
+        victim = min(victims, key=lambda r: r.last_scheduled)
+        self._release_pages(victim.request_id)
+        victim.pos = 0
+        victim.state = "preempted"
+        self.preemptions += 1
+        return True
+
+    def _release_pages(self, request_id: int):
+        page_ids = [p.page_id for p in self.pool.request_pages(request_id)]
+        for pid in page_ids:
+            self.pool.free(pid)
+        if self.kv_backend is not None:
+            self.kv_backend.forget_pages(page_ids)
+
+    def _reclaim_logical_pages(self):
+        """Nothing schedulable while active requests exist — logical pages
+        are exhausted.  Reclaim by preempting a paused page-holder first,
+        else the youngest active page-holder (it re-enters the wait queue
+        and recomputes later).  A request that is alone against the whole
+        pool can never grow or finish: truncate it."""
+        if self._preempt_one():
+            return
+        active = sorted((r for r in self.requests.values()
+                         if r.state == "active"),
+                        key=lambda r: r.last_scheduled)
+        holders = [r for r in active
+                   if self.pool.request_pages(r.request_id)]
+        if not holders:
+            return
+        if len(active) == 1 and holders == active:
+            self._finish(active[0], truncated=True)
+            return
+        victim = holders[-1]
+        self._release_pages(victim.request_id)
+        victim.pos = 0
+        victim.state = "waiting"
+        self.wait_queue.append(victim.request_id)
+        self.preemptions += 1
+
+    # -------------------------------------------------------- prefill
+    def _prefill_request(self, req: Request):
+        """Ingest ``req.context[:-1]`` (the last token is fed by the first
+        decode step).  One jitted dispatch in one_shot mode; the chunked
+        oracle steps tokens through decode."""
+        context = req.context
+        n_ingest = len(context) - 1
+        if n_ingest == 0:
+            req.pos = 0
+            return
+        if self.cfg.prefill == "chunked":
+            for t in context[:-1]:
+                self._decode_one(req, t)
+            self.prefill_tokens += n_ingest
+            return
+        P = self.cfg.page_size
+        MP = self.cfg.max_pages_per_seq
+        rid = req.request_id
+        n_pages = -(-n_ingest // P)
+        self._ensure_free_hbm(n_pages, needed=[])
+        pages = [self.pool.allocate(rid, idx, self.step_count)
+                 for idx in range(n_pages)]
+        # Pad the token axis to a power-of-two bucket (>= one page) so jit
+        # compiles per bucket, not per prompt length.
+        S = max(P, 1 << (n_ingest - 1).bit_length())
+        tokens = np.zeros((S,), np.int32)
+        tokens[:n_ingest] = context[:-1]
+        slots = np.full((S,), self.scratch_slot, np.int32)
+        offs = np.zeros((S,), np.int32)
+        for t in range(n_ingest):
+            slots[t] = pages[t // P].hbm_slot
+            offs[t] = t % P
+        table = np.full((MP,), -1, np.int32)
+        for p in pages:
+            table[p.index_in_seq] = p.hbm_slot
+        nk, nv = self._prefill(
+            self.params, self.pool.k_hbm, self.pool.v_hbm,
+            jnp.asarray(tokens), jnp.asarray(table), jnp.asarray(slots),
+            jnp.asarray(offs), jnp.int32(n_ingest))
+        self.pool.k_hbm, self.pool.v_hbm = nk, nv
+        req.pos = n_ingest
+        for i, p in enumerate(pages):
+            p.accesses += 1         # the dispatch's access set: every page
+            p.tokens_used = min(P, n_ingest - i * P)
+        self.prefill_dispatches += 1
+        self.prefill_tokens += n_ingest
 
     # ------------------------------------------------------- page mgmt
-    def _note_swap_in(self):
-        """A demand swap-in is a rental payment; log it on the stream."""
-        self.swap_in_events += 1
-        if self.runtime is not None:
-            self.runtime.record_rental(self.pool.page_bytes, source="swap_in")
+    def _note_swap_in(self, n_pages: int):
+        """Demand swap-ins are rental payments; one batched transfer is
+        still ``n_pages`` pages of rent."""
+        self.swap_in_events += n_pages
+        if self.runtime is not None and n_pages:
+            self.runtime.record_rental(self.pool.page_bytes * n_pages,
+                                       source="swap_in")
 
-    def _page_for_write(self, req: Request) -> tuple:
-        """(hbm_slot, offset) for the next token; allocates as needed."""
+    def _page_for_write(self, req: Request) -> Tuple[int, int]:
+        """(hbm_slot, offset) for the next token.  The batch-prepare pass
+        has already made every page resident and allocated the write page."""
         idx, off = divmod(req.pos, self.cfg.page_size)
-        pages = self.pool.request_pages(req.request_id)
-        if idx >= len(pages):
-            self._ensure_free_hbm(1, needed=[p.page_id for p in pages])
-            page = self.pool.allocate(req.request_id, idx, self.step_count)
-            pages.append(page)
-        page = pages[idx]
-        if page.hbm_slot is None:
-            self._ensure_free_hbm(
-                1, needed=[p.page_id for p in pages])
-            self.pool.swap_in(page.page_id)
-            self._note_swap_in()
+        page = self.pool.request_pages(req.request_id)[idx]
         page.tokens_used = off + 1
         return page.hbm_slot, off
 
-    def _ensure_resident(self, req: Request):
-        pages = self.pool.request_pages(req.request_id)
-        needed = [p.page_id for p in pages]
-        for p in pages:
-            if p.hbm_slot is None:
-                self._ensure_free_hbm(1, needed=needed)
-                self.pool.swap_in(p.page_id)
-                self._note_swap_in()
+    def _prepare_batch(self, reqs: List[Request]):
+        """Make the whole scheduled batch resident with ONE atomic batched
+        exchange (evictions + swap-ins staged together, so it succeeds even
+        when both free lists are empty), then allocate write pages."""
+        P = self.cfg.page_size
+        need_ids: List[int] = []
+        missing: List[int] = []
+        n_alloc = 0
+        for r in reqs:
+            pages = self.pool.request_pages(r.request_id)
+            need_ids.extend(p.page_id for p in pages)
+            missing.extend(p.page_id for p in pages if p.hbm_slot is None)
+            if r.pos // P >= len(pages):
+                n_alloc += 1
+        shortfall = len(missing) + n_alloc - len(self.pool.free_hbm)
+        victims: List[int] = []
+        if shortfall > 0:
+            exclude = set(need_ids)
+            cands = [p for p in self.pool.pages.values()
+                     if p.hbm_slot is not None and p.page_id not in exclude]
+            victims = self.eviction.pick_many(cands, self, shortfall)
+            if len(victims) < shortfall:
+                raise MemoryError("no evictable page")   # unreachable under
+        if victims or missing:                           # scheduler budgets
+            self.pool.exchange(victims, missing)
+            self._note_swap_in(len(missing))
+        for r in reqs:
+            idx = r.pos // P
+            if idx >= len(self.pool.request_pages(r.request_id)):
+                self.pool.allocate(r.request_id, idx, self.step_count)
 
     def _ensure_free_hbm(self, n: int, needed: List[int]):
-        while len(self.pool.free_hbm) < n:
-            victim = self._pick_victim(exclude=set(needed))
-            if victim is None:
-                raise MemoryError("no evictable page")
-            self.pool.swap_out(victim)
-
-    def _pick_victim(self, exclude) -> Optional[int]:
+        shortfall = n - len(self.pool.free_hbm)
+        if shortfall <= 0:
+            return
+        exclude = set(needed)
         cands = [p for p in self.pool.pages.values()
                  if p.hbm_slot is not None and p.page_id not in exclude]
-        return self.eviction.pick(cands, self)
+        victims = self.eviction.pick_many(cands, self, shortfall)
+        if len(victims) < shortfall:
+            raise MemoryError("no evictable page")   # unreachable under
+        self.pool.swap_out_many(victims)             # scheduler budgets
 
     # ============================================================ stepping
     def _decode_one(self, req: Request, token: int) -> int:
-        """Single-request decode (prefill path)."""
+        """Single-request decode (the chunked-prefill oracle path)."""
+        self._prepare_batch([req])
+        self.prefill_dispatches += 1
         return self._run_batch([(req, token)])[0]
 
-    def step(self) -> Dict[int, int]:
-        """One engine step: schedule, decode, bookkeeping."""
-        self.step_count += 1
+    def _schedule(self) -> List[Request]:
+        """Pack active requests (oldest-scheduled first) under the HBM-slot
+        and logical-page budgets, so the batch can always be made resident
+        without evicting its own members and every allocation can succeed."""
         active = [r for r in self.requests.values() if r.state == "active"]
         active.sort(key=lambda r: r.last_scheduled)
-        sched = active[: self.cfg.max_batch]
+        P = self.cfg.page_size
+        sched: List[Request] = []
+        hbm_budget = self.usable_hbm_pages
+        logical_budget = self.free_logical_pages()
+        for r in active:
+            if len(sched) == self.cfg.max_batch:
+                break
+            n_pages = len(self.pool.request_pages(r.request_id))
+            need = max(n_pages, r.pos // P + 1)
+            if need > self.usable_hbm_pages:
+                # Outgrew the fast tier entirely: can never decode again.
+                self._finish(r, truncated=True)
+                continue
+            grow = need - n_pages
+            if need > hbm_budget or grow > logical_budget:
+                self.starved_steps += 1     # waits, aging via last_scheduled
+                continue
+            sched.append(r)
+            hbm_budget -= need
+            logical_budget -= grow
+        return sched
+
+    def step(self) -> Dict[int, int]:
+        """One engine step: admit, schedule, decode, bookkeeping."""
+        self.step_count += 1
+        self._admit_waiting()
+        sched = self._schedule()
+        if not sched and any(r.state == "active"
+                             for r in self.requests.values()):
+            self._reclaim_logical_pages()
+            sched = self._schedule()
         out: Dict[int, int] = {}
         if sched:
             pairs = []
@@ -350,19 +701,32 @@ class Engine:
                 nxt = (r.generated[-1] if r.generated
                        else (r.tokens[-1] if r.tokens else 1))
                 pairs.append((r, nxt))
+            self._prepare_batch(sched)
             toks = self._run_batch(pairs)
             for r, t in zip(sched, toks):
                 r.generated.append(int(t))
                 out[r.request_id] = int(t)
                 if len(r.generated) >= r.max_new:
-                    r.state = "finished"
-                    for p in self.pool.request_pages(r.request_id):
-                        self.pool.free(p.page_id)
+                    self._finish(r)
         if self.runtime is not None:
             self.runtime.on_step()        # MaybeMigrate at the interval
         return out
 
+    def _finish(self, req: Request, truncated: bool = False):
+        """Lifecycle cleanup: free pages, prune the live tables (requests,
+        eviction recs, logits), park the result in ``finished``."""
+        self._release_pages(req.request_id)
+        req.state = "finished"
+        req.truncated = truncated
+        if truncated:
+            self.truncations += 1
+        self.requests.pop(req.request_id, None)
+        self.last_logits.pop(req.request_id, None)
+        self.finished[req.request_id] = req
+
     def _run_batch(self, pairs) -> List[int]:
+        """Decode one batch.  Pages are already resident and write pages
+        allocated (``_prepare_batch``)."""
         B = self.cfg.max_batch
         MP = self.cfg.max_pages_per_seq
         tokens = np.zeros((B, 1), np.int32)
@@ -373,7 +737,6 @@ class Engine:
         active = np.zeros((B,), bool)
         for i, (req, tok) in enumerate(pairs):
             req.last_scheduled = self.step_count
-            self._ensure_resident(req)
             slot, off = self._page_for_write(req)
             req.pos += 1
             pages = self.pool.request_pages(req.request_id)
@@ -390,6 +753,10 @@ class Engine:
             jnp.asarray(tokens), jnp.asarray(table), jnp.asarray(lengths),
             jnp.asarray(wslot), jnp.asarray(woff), jnp.asarray(active))
         self.pool.k_hbm, self.pool.v_hbm = nk, nv
+        if self.cfg.keep_logits:
+            logits_np = np.asarray(logits)
+            for i, (req, _) in enumerate(pairs):
+                self.last_logits[req.request_id] = logits_np[i]
         toks = np.asarray(jnp.argmax(logits, axis=-1))
         return [int(toks[i]) for i in range(len(pairs))]
 
@@ -400,5 +767,15 @@ class Engine:
             "swap_ins": self.pool.swaps_in,
             "swap_outs": self.pool.swaps_out,
             "bytes_moved": self.pool.bytes_moved,
+            "transfer_events": self.pool.transfer_events,
             "hbm_pages_used": self.pool.hbm_used(),
+            "live_requests": len(self.requests),
+            "waiting_requests": len(self.wait_queue),
+            "finished_requests": len(self.finished),
+            "prefill_dispatches": self.prefill_dispatches,
+            "prefill_tokens": self.prefill_tokens,
+            "admissions": self.admissions,
+            "preemptions": self.preemptions,
+            "starved_steps": self.starved_steps,
+            "truncations": self.truncations,
         }

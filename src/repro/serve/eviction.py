@@ -27,6 +27,22 @@ class EvictionPolicy:
     def pick(self, candidates: List[Page], engine) -> Optional[int]:
         raise NotImplementedError
 
+    def pick_many(self, candidates: List[Page], engine,
+                  n: int) -> List[int]:
+        """Pick up to ``n`` victims (ranked by repeated ``pick``); the
+        engine swaps them out in ONE batched migration rather than one
+        transfer per victim.  Policies with a cheaper bulk ranking may
+        override."""
+        pool = list(candidates)
+        victims: List[int] = []
+        while len(victims) < n and pool:
+            vid = self.pick(pool, engine)
+            if vid is None:
+                break
+            victims.append(vid)
+            pool = [p for p in pool if p.page_id != vid]
+        return victims
+
 
 class LRUEviction(EvictionPolicy):
     """Evict the page of the least-recently-scheduled request."""

@@ -13,12 +13,18 @@ be swapped in before its sequence can decode (the swap is the rental the
 ski-rental controller weighs).  The engine keeps exact per-page access
 counts — on every decode step the access set is known statically (all pages
 of the scheduled sequences, or the window's pages under SWA).
+
+Migrations are batched: ``swap_in_many`` / ``swap_out_many`` realize a whole
+direction of a ``MigrationPlan`` as one gather + one staged transfer + one
+scatter per pool array, so enforcing an N-page plan costs a constant number
+of host<->device transfers (``transfer_events`` is the probe) while the
+per-page swap/byte counters stay exact.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +42,10 @@ class Page:
     birth_step: int
     hbm_slot: Optional[int]      # slot in HBM pool, None if on host
     host_slot: Optional[int]
-    accesses: int = 0
+    # Float, not int: ReweightProfile decays counters every interval, and
+    # int-flooring ``1 * 0.5`` to zero would erase exactly the recency
+    # signal decay is meant to preserve.
+    accesses: float = 0.0
     tokens_used: int = 0
 
 
@@ -73,6 +82,11 @@ class PagedKVPool:
         self.swaps_in = 0
         self.swaps_out = 0
         self.bytes_moved = 0
+        # Host<->device transfer probe: one event per staged pool-array
+        # transfer (K and V count separately).  A batched N-page migration
+        # costs a constant number of events per direction; the per-page
+        # path costs 2 per page.  The migration-parity test asserts on it.
+        self.transfer_events = 0
 
     # ------------------------------------------------------------ alloc
     @property
@@ -102,55 +116,139 @@ class PagedKVPool:
             self.free_host.append(page.host_slot)
 
     # ------------------------------------------------------- migrations
-    def _copy_page(self, src_k, src_v, si, dst_k, dst_v, di, dst_sharding):
-        # Memory-kind metadata does not survive eager slicing on the CPU
-        # backend (the slice stays physically host-resident while reporting
-        # "device"), so the cross-tier copy stages through numpy and lands
-        # with an explicit device_put onto the destination tier's sharding.
-        # On TPU this path is a jitted DMA with in/out memory kinds instead.
-        import numpy as np
+    def _gather(self, src_k, src_v, src_idx):
+        """Stage M pages out of a tier as numpy: ONE gather + device_get
+        per pool array, regardless of M.
 
-        ksrc = np.asarray(jax.device_get(
-            jax.lax.dynamic_slice_in_dim(src_k, si, 1, axis=1)))
-        vsrc = np.asarray(jax.device_get(
-            jax.lax.dynamic_slice_in_dim(src_v, si, 1, axis=1)))
-        ksrc = jax.device_put(ksrc, dst_sharding)
-        vsrc = jax.device_put(vsrc, dst_sharding)
-        dst_k = jax.lax.dynamic_update_slice_in_dim(dst_k, ksrc, di, axis=1)
-        dst_v = jax.lax.dynamic_update_slice_in_dim(dst_v, vsrc, di, axis=1)
+        Memory-kind metadata does not survive eager slicing on the CPU
+        backend (the slice stays physically host-resident while reporting
+        "device"), so the cross-tier copy stages through numpy and lands
+        with an explicit device_put onto the destination tier's sharding
+        (``_scatter``).  On TPU this path is a jitted DMA with in/out
+        memory kinds instead.
+        """
+        if not src_idx:
+            return None
+        si = jnp.asarray(src_idx, jnp.int32)
+        return (np.asarray(jax.device_get(jnp.take(src_k, si, axis=1))),
+                np.asarray(jax.device_get(jnp.take(src_v, si, axis=1))))
+
+    def _scatter(self, dst_k, dst_v, dst_idx, staged, dst_sharding):
+        """Land staged pages on a tier: ONE device_put + scatter per pool
+        array, regardless of M."""
+        di = jnp.asarray(dst_idx, jnp.int32)
+        ksrc = jax.device_put(staged[0], dst_sharding)
+        vsrc = jax.device_put(staged[1], dst_sharding)
+        dst_k = dst_k.at[:, di].set(ksrc)
+        dst_v = dst_v.at[:, di].set(vsrc)
+        self.transfer_events += 2            # one per pool array (K, V)
         return dst_k, dst_v
 
-    def swap_out(self, page_id: int):
-        """HBM -> host."""
-        page = self.pages[page_id]
-        if page.hbm_slot is None:
+    def _move_pages(self, src_k, src_v, src_idx, dst_k, dst_v, dst_idx,
+                    dst_sharding):
+        """One-directional batched move: gather-stage then scatter."""
+        staged = self._gather(src_k, src_v, src_idx)
+        return self._scatter(dst_k, dst_v, dst_idx, staged, dst_sharding)
+
+    def swap_out_many(self, page_ids: Sequence[int]):
+        """HBM -> host, one batched transfer for the whole id list.
+        Already-slow and unknown ids are skipped; counters stay per-page
+        exact (one swap + page_bytes per page actually moved)."""
+        ids = [pid for pid in page_ids
+               if pid in self.pages and self.pages[pid].hbm_slot is not None]
+        if not ids:
             return
-        if not self.free_host:
+        if len(self.free_host) < len(ids):
             raise MemoryError("host pool exhausted")
-        di = self.free_host.pop()
-        self.k_host, self.v_host = self._copy_page(
-            self.k_hbm, self.v_hbm, page.hbm_slot,
-            self.k_host, self.v_host, di, self._host_sharding)
-        self.free_hbm.append(page.hbm_slot)
-        page.hbm_slot, page.host_slot = None, di
-        self.swaps_out += 1
-        self.bytes_moved += self.page_bytes
+        src = [self.pages[pid].hbm_slot for pid in ids]
+        dst = [self.free_host.pop() for _ in ids]
+        self.k_host, self.v_host = self._move_pages(
+            self.k_hbm, self.v_hbm, src,
+            self.k_host, self.v_host, dst, self._host_sharding)
+        for pid, si, di in zip(ids, src, dst):
+            page = self.pages[pid]
+            self.free_hbm.append(si)
+            page.hbm_slot, page.host_slot = None, di
+        self.swaps_out += len(ids)
+        self.bytes_moved += self.page_bytes * len(ids)
+
+    def swap_in_many(self, page_ids: Sequence[int]):
+        """host -> HBM, one batched transfer for the whole id list."""
+        ids = [pid for pid in page_ids
+               if pid in self.pages and self.pages[pid].hbm_slot is None]
+        if not ids:
+            return
+        if len(self.free_hbm) < len(ids):
+            raise MemoryError("HBM pool exhausted; evict first")
+        src = [self.pages[pid].host_slot for pid in ids]
+        dst = [self.free_hbm.pop() for _ in ids]
+        self.k_hbm, self.v_hbm = self._move_pages(
+            self.k_host, self.v_host, src,
+            self.k_hbm, self.v_hbm, dst, self._dev_sharding)
+        for pid, si, di in zip(ids, src, dst):
+            page = self.pages[pid]
+            self.free_host.append(si)
+            page.host_slot, page.hbm_slot = None, di
+        self.swaps_in += len(ids)
+        self.bytes_moved += self.page_bytes * len(ids)
+
+    def exchange(self, out_ids: Sequence[int], in_ids: Sequence[int]):
+        """Atomic bidirectional migration: demote ``out_ids`` and promote
+        ``in_ids`` in one batched operation.
+
+        Both directions are STAGED before any slot is freed, so the
+        exchange succeeds even when both free lists are empty (a pure slot
+        swap) — the case where evict-then-swap-in would deadlock on
+        ``free_host``.  Feasibility: len(out) <= len(in) + free_host and
+        len(in) <= len(out) + free_hbm (the scheduler's logical-page budget
+        guarantees both).  Still one gather + one staged transfer + one
+        scatter per pool array per direction.
+        """
+        outs = [pid for pid in out_ids
+                if pid in self.pages and self.pages[pid].hbm_slot is not None]
+        ins = [pid for pid in in_ids
+               if pid in self.pages and self.pages[pid].hbm_slot is None]
+        if not outs and not ins:
+            return
+        if len(outs) > len(ins) + len(self.free_host):
+            raise MemoryError("host pool exhausted")
+        if len(ins) > len(outs) + len(self.free_hbm):
+            raise MemoryError("HBM pool exhausted; evict first")
+        out_src = [self.pages[pid].hbm_slot for pid in outs]
+        in_src = [self.pages[pid].host_slot for pid in ins]
+        # Stage BOTH directions before any scatter: a destination slot may
+        # be a just-freed source slot of the opposite direction.
+        out_stage = self._gather(self.k_hbm, self.v_hbm, out_src)
+        in_stage = self._gather(self.k_host, self.v_host, in_src)
+        self.free_hbm.extend(out_src)
+        self.free_host.extend(in_src)
+        in_dst = [self.free_hbm.pop() for _ in ins]
+        out_dst = [self.free_host.pop() for _ in outs]
+        if outs:
+            self.k_host, self.v_host = self._scatter(
+                self.k_host, self.v_host, out_dst, out_stage,
+                self._host_sharding)
+        if ins:
+            self.k_hbm, self.v_hbm = self._scatter(
+                self.k_hbm, self.v_hbm, in_dst, in_stage,
+                self._dev_sharding)
+        for pid, di in zip(outs, out_dst):
+            page = self.pages[pid]
+            page.hbm_slot, page.host_slot = None, di
+        for pid, di in zip(ins, in_dst):
+            page = self.pages[pid]
+            page.host_slot, page.hbm_slot = None, di
+        self.swaps_out += len(outs)
+        self.swaps_in += len(ins)
+        self.bytes_moved += self.page_bytes * (len(outs) + len(ins))
+
+    def swap_out(self, page_id: int):
+        """HBM -> host (single page; the batched path with M=1)."""
+        self.swap_out_many([page_id])
 
     def swap_in(self, page_id: int):
-        """host -> HBM."""
-        page = self.pages[page_id]
-        if page.hbm_slot is not None:
-            return
-        if not self.free_hbm:
-            raise MemoryError("HBM pool exhausted; evict first")
-        di = self.free_hbm.pop()
-        self.k_hbm, self.v_hbm = self._copy_page(
-            self.k_host, self.v_host, page.host_slot,
-            self.k_hbm, self.v_hbm, di, self._dev_sharding)
-        self.free_host.append(page.host_slot)
-        page.host_slot, page.hbm_slot = None, di
-        self.swaps_in += 1
-        self.bytes_moved += self.page_bytes
+        """host -> HBM (single page; the batched path with M=1)."""
+        self.swap_in_many([page_id])
 
     # --------------------------------------------------------- queries
     def resident(self, page_id: int) -> bool:

@@ -7,7 +7,10 @@ import pytest
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.paged_attention import paged_attention_pallas
+from repro.kernels.paged_attention import (
+    paged_attention_pallas,
+    paged_prefill_pallas,
+)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
 TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
@@ -97,6 +100,54 @@ def test_paged_attention_sweep(B, H, K, dh, N, P, MP, window, dtype):
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32),
         atol=TOL[dtype], rtol=TOL[dtype])
+
+
+# ----------------------------------------------------- one-shot prefill
+def _prefill_case(rng, S, N, P, K, dh, MP):
+    q = jnp.asarray(rng.normal(size=(S, 4 * K, dh)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(N, P, K, dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(N, P, K, dh)), jnp.float32)
+    table = np.full((MP,), -1, np.int32)
+    slots = rng.permutation(N)
+    for pg in range(-(-S // P)):
+        table[pg] = slots[pg]
+    return q, kp, vp, jnp.asarray(table)
+
+
+@pytest.mark.parametrize("window", [None, 5])
+def test_paged_prefill_sweep(window):
+    """One sequence's S prompt rows with causal lengths 1..S (plus padded
+    zero-length rows): Pallas vs the masked-einsum oracle."""
+    rng = np.random.default_rng(3)
+    S, N, P, K, dh, MP = 11, 8, 4, 2, 64, 4
+    q, kp, vp, table = _prefill_case(rng, S, N, P, K, dh, MP)
+    lengths = jnp.asarray(
+        np.concatenate([np.arange(1, S + 1), np.zeros(5)]).astype(np.int32))
+    qpad = jnp.concatenate([q, jnp.zeros((5,) + q.shape[1:], q.dtype)])
+    got = paged_prefill_pallas(qpad, kp, vp, table, lengths, window=window,
+                               interpret=True)
+    want = ref.paged_prefill_reference(qpad, kp, vp, table, lengths,
+                                       window=window)
+    np.testing.assert_allclose(
+        np.asarray(got[:S], np.float32), np.asarray(want[:S], np.float32),
+        atol=TOL[jnp.float32], rtol=TOL[jnp.float32])
+    assert np.all(np.isfinite(np.asarray(got))), \
+        "padded zero-length rows must not emit NaNs"
+
+
+def test_paged_prefill_padding_invariance():
+    """Bucketed prompts: real rows of a padded call must be bitwise equal
+    to the unpadded call — the property that lets the engine pad prompts
+    to power-of-two buckets without perturbing ingestion."""
+    rng = np.random.default_rng(4)
+    S, N, P, K, dh, MP = 7, 8, 4, 2, 64, 4
+    q, kp, vp, table = _prefill_case(rng, S, N, P, K, dh, MP)
+    lengths = jnp.asarray(np.arange(1, S + 1, dtype=np.int32))
+    exact = ref.paged_prefill_reference(q, kp, vp, table, lengths)
+    qpad = jnp.concatenate([q, jnp.zeros((9,) + q.shape[1:], q.dtype)])
+    lpad = jnp.concatenate([lengths, jnp.zeros((9,), jnp.int32)])
+    padded = ref.paged_prefill_reference(qpad, kp, vp, table, lpad)
+    assert np.array_equal(np.asarray(padded[:S]), np.asarray(exact))
 
 
 # ----------------------------------------------------------------- SSD scan

@@ -1,5 +1,6 @@
 """Serving engine tests: paged decode correctness (vs the contiguous-cache
-model decode), two-tier page migration, and the guided-policy benefit."""
+model decode), one-shot vs chunked prefill equality, two-tier page
+migration, partial-batch masking, and the guided-policy benefit."""
 
 import dataclasses
 
@@ -16,6 +17,14 @@ from repro.serve import Engine, ServeConfig
 @pytest.fixture(scope="module")
 def model_and_params():
     cfg = dataclasses.replace(get_smoke("llama3_2_1b"), remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def moe_model_and_params():
+    cfg = dataclasses.replace(get_smoke("granite_moe_3b_a800m"), remat=False)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     return model, params
@@ -40,6 +49,26 @@ def greedy_reference(model, params, prompt, n_new, cache_len=64):
     return out
 
 
+def still_live(eng, rid):
+    """Finished requests are pruned from ``engine.requests``."""
+    return rid in eng.requests
+
+
+def generated(eng, rid):
+    req = eng.finished.get(rid) or eng.requests.get(rid)
+    return req.generated
+
+
+def request_pages_bits(eng, rid):
+    """K/V page contents for one request, in logical page order."""
+    out = []
+    for p in eng.pool.request_pages(rid):
+        assert p.hbm_slot is not None
+        out.append(np.asarray(eng.pool.k_hbm[:, p.hbm_slot]))
+        out.append(np.asarray(eng.pool.v_hbm[:, p.hbm_slot]))
+    return out
+
+
 def test_paged_decode_matches_contiguous(model_and_params):
     model, params = model_and_params
     prompt = [5, 17, 133, 42, 7, 99, 250, 3]
@@ -51,15 +80,74 @@ def test_paged_decode_matches_contiguous(model_and_params):
                              host_pages=64, policy="gdt", interval_steps=4))
     eng.add_request(0, prompt, max_new=n_new)
     got = []
-    while self_active(eng, 0):
+    while still_live(eng, 0):
         out = eng.step()
         if 0 in out:
             got.append(out[0])
     assert got == ref, f"paged {got} != contiguous {ref}"
 
 
-def self_active(eng, rid):
-    return eng.requests[rid].state == "active"
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_one_shot_prefill_bitwise_equals_chunked(
+        family, model_and_params, moe_model_and_params):
+    """The tentpole equality: a whole prompt ingested in ONE jitted dispatch
+    must produce bitwise the same K/V pages and the same continuation as
+    stepping the prompt through decode token by token (which in turn is the
+    decode path itself) — on dense and MoE smoke configs."""
+    model, params = (model_and_params if family == "dense"
+                     else moe_model_and_params)
+    prompt = [5, 17, 133, 42, 7, 99, 250, 3, 11, 29]
+    n_new = 5
+
+    def make(mode):
+        eng = Engine(model, params,
+                     ServeConfig(max_batch=2, page_size=4, hbm_pages=32,
+                                 host_pages=64, policy="gdt",
+                                 interval_steps=4, prefill=mode))
+        eng.add_request(0, prompt, max_new=n_new)
+        return eng
+
+    one, chunked = make("one_shot"), make("chunked")
+    # O(1) jitted dispatches for an S-token prompt, not S.
+    assert one.prefill_dispatches == 1
+    assert chunked.prefill_dispatches == len(prompt) - 1
+    for a, b in zip(request_pages_bits(one, 0), request_pages_bits(chunked, 0)):
+        assert np.array_equal(a, b), "prefill K/V pages differ bitwise"
+    while still_live(one, 0):
+        one.step()
+    while still_live(chunked, 0):
+        chunked.step()
+    assert generated(one, 0) == generated(chunked, 0)
+
+
+def test_partial_batch_logits_match_full_batch(model_and_params):
+    """Inactive batch rows are explicitly masked: a partial batch (2 live
+    requests in a 4-slot batch) must produce bitwise the same logits for
+    those requests as a full batch that also carries two more."""
+    model, params = model_and_params
+    prompts = {0: [5, 17, 133, 42], 1: [7, 99, 250, 3],
+               2: [11, 29, 31, 2], 3: [1, 2, 3, 4]}
+
+    def make(rids):
+        eng = Engine(model, params,
+                     ServeConfig(max_batch=4, page_size=4, hbm_pages=48,
+                                 host_pages=64, policy="gdt",
+                                 keep_logits=True))
+        for rid in rids:
+            eng.add_request(rid, prompts[rid], max_new=4)
+        return eng
+
+    partial, full = make([0, 1]), make([0, 1, 2, 3])
+    for _ in range(4):
+        partial.step()
+        full.step()
+        for rid in (0, 1):
+            if rid in partial.last_logits and rid in full.last_logits:
+                assert np.array_equal(partial.last_logits[rid],
+                                      full.last_logits[rid]), \
+                    f"rid {rid}: partial-batch logits != full-batch"
+    assert generated(partial, 0) == generated(full, 0)
+    assert generated(partial, 1) == generated(full, 1)
 
 
 def test_multiple_concurrent_requests(model_and_params):
@@ -71,10 +159,11 @@ def test_multiple_concurrent_requests(model_and_params):
         eng.add_request(rid, [1 + rid, 2 + rid, 3 + rid], max_new=5)
     for _ in range(30):
         eng.step()
-        if all(r.state == "finished" for r in eng.requests.values()):
+        if not eng.requests:
             break
-    assert all(r.state == "finished" for r in eng.requests.values())
-    assert all(len(r.generated) == 5 for r in eng.requests.values())
+    assert not eng.requests, "finished requests must leave the engine"
+    assert len(eng.finished) == 6
+    assert all(len(r.generated) == 5 for r in eng.finished.values())
 
 
 def test_pages_migrate_under_pressure(model_and_params):
@@ -96,7 +185,7 @@ def test_pages_migrate_under_pressure(model_and_params):
     # New active session forces evictions.
     eng.add_request(99, prompt, max_new=4)
     got99 = []
-    while self_active(eng, 99):
+    while still_live(eng, 99):
         out = eng.step()
         if 99 in out:
             got99.append(out[99])
@@ -107,12 +196,33 @@ def test_pages_migrate_under_pressure(model_and_params):
     # exact same continuation.
     eng.resume(0)
     got0 = []
-    while self_active(eng, 0):
+    while still_live(eng, 0):
         out = eng.step()
         if 0 in out:
             got0.append(out[0])
     assert got0 == ref
     assert eng.pool.swaps_in > 0
+
+
+def test_reweight_keeps_float_counters_and_ordering(model_and_params):
+    """ReweightProfile must not floor counters to int: at access_decay=0.5 a
+    page with one access per interval would be zeroed, erasing exactly the
+    recency ordering decay is meant to preserve."""
+    model, params = model_and_params
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=1, page_size=4, hbm_pages=16,
+                             host_pages=32, policy="gdt"))
+    eng.add_request(0, [1, 2, 3, 4, 5, 6, 7, 8], max_new=4)
+    pages = eng.pool.request_pages(0)
+    pages[0].accesses = 1.0      # cold-ish page
+    pages[1].accesses = 3.0      # hot page
+    backend = eng.kv_backend
+    backend.reweight(0.5)
+    backend.reweight(0.5)
+    assert pages[0].accesses == pytest.approx(0.25)
+    assert pages[1].accesses == pytest.approx(0.75)
+    assert 0 < pages[0].accesses < pages[1].accesses, \
+        "two decay intervals must preserve relative page ordering"
 
 
 def run_session_workload(model, params, policy, seed=0):
