@@ -1,10 +1,13 @@
 """Serving-engine benchmark: guided KV-page tiering (the paper's technique
 applied to serving) vs LRU/FIFO eviction on a multi-session workload with an
-HBM page budget, plus a prefill-throughput case comparing one-shot paged
-prefill (a single jitted dispatch per prompt) against the chunked per-token
-oracle.  ``derived`` = page-swap bytes moved (lower is better) for swap
-rows, modeled step time (PCIe swaps + decode) for time rows, prompt tokens/s
-for prefill-throughput rows and seconds for time-to-first-token rows."""
+HBM page budget, a prefill-throughput case comparing one-shot paged prefill
+(a single jitted dispatch per prompt) against the chunked per-token oracle,
+and a generation-API case measuring in-dispatch sampling overhead (sampled
+vs greedy decode tokens/s) plus streaming time-to-first-delta through
+``LLM.submit``.  ``derived`` = page-swap bytes moved (lower is better) for
+swap rows, modeled step time (PCIe swaps + decode) for time rows, prompt
+tokens/s for prefill-throughput rows, seconds for TTFT rows, decode
+tokens/s for sampled-decode rows and counts for finish-reason rows."""
 
 from __future__ import annotations
 
@@ -18,7 +21,7 @@ from repro.configs import get_smoke
 from repro.core import TPU_V5E
 from repro.launch.analysis import serving_summary
 from repro.models import build_model
-from repro.serve import Engine, ServeConfig
+from repro.serve import LLM, SamplingParams, ServeConfig
 
 from .common import emit
 
@@ -33,38 +36,42 @@ def _smoke_model():
 def session_workload(policy: str, rounds: int = 10):
     """Hot multi-turn sessions + periodic one-shot 'scan' sessions (long
     prompt, generated once, never resumed) — the access pattern where
-    frequency-aware guidance must resist cache pollution."""
+    frequency-aware guidance must resist cache pollution.  Driven entirely
+    through the ``LLM`` front door."""
     cfg, model, params = _smoke_model()
-    eng = Engine(model, params, ServeConfig(
+    llm = LLM(model, params, ServeConfig(
         max_batch=2, page_size=4, hbm_pages=12, host_pages=160,
         policy=policy, interval_steps=4))
     rng = np.random.default_rng(0)
     prompt = [2, 7, 1, 8, 2, 8]
     for rid in range(4):
-        eng.add_request(rid, prompt, max_new=64)
-        eng.pause(rid)
+        llm.submit(prompt, SamplingParams(max_tokens=64), request_id=rid)
+        llm.pause(rid)
     hot = [0, 1]
     scan_id = 1000
     t0 = time.perf_counter()
     for r in range(rounds):
         for rid in hot:
-            eng.resume(rid)
-        if r % 5 == 4:
-            eng.resume(2 + (r // 5) % 2)
+            if llm.is_live(rid):
+                llm.resume(rid)
+        extra = 2 + (r // 5) % 2
+        if r % 5 == 4 and llm.is_live(extra):
+            llm.resume(extra)
         for _ in range(2):
-            eng.step()
+            llm.step()
         if r % 2 == 1:
             # scan: long one-shot request, decoded briefly, then abandoned
             long_prompt = [int(t) for t in rng.integers(1, cfg.vocab, 16)]
-            eng.add_request(scan_id, long_prompt, max_new=2)
-            eng.step()
-            eng.step()
+            llm.submit(long_prompt, SamplingParams(max_tokens=2),
+                       request_id=scan_id)
+            llm.step()
+            llm.step()
             scan_id += 1
-        for rid in list(eng.requests):
-            if eng.requests[rid].state == "active":
-                eng.pause(rid)
+        for rid in list(llm.engine.requests):
+            if llm.engine.requests[rid].state == "active":
+                llm.pause(rid)
     wall = time.perf_counter() - t0
-    return serving_summary(eng), wall
+    return serving_summary(llm.engine), wall
 
 
 def prefill_throughput(mode: str, prompt_len: int):
@@ -72,32 +79,66 @@ def prefill_throughput(mode: str, prompt_len: int):
     ingest itself and wall-clock time-to-first-token (ingest + one decode
     step), measured after a warm-up request compiles both paths."""
     _, model, params = _smoke_model()
-    eng = Engine(model, params, ServeConfig(
+    llm = LLM(model, params, ServeConfig(
         max_batch=2, page_size=4, hbm_pages=64, host_pages=64,
         policy="gdt", interval_steps=8, prefill=mode,
         max_pages_per_seq=max(32, prompt_len // 4 + 2)))
+    eng = llm.engine
     rng = np.random.default_rng(1)
     warm = [int(t) for t in rng.integers(1, 256, prompt_len)]
-    eng.add_request(0, warm, max_new=1)           # compile
-    while 0 in eng.requests:
-        eng.step()
+    llm.submit(warm, SamplingParams(max_tokens=1), request_id=0)  # compile
+    while llm.is_live(0):
+        llm.step()
     prompt = [int(t) for t in rng.integers(1, 256, prompt_len)]
     d0 = eng.prefill_dispatches
     t0 = time.perf_counter()
-    eng.add_request(1, prompt, max_new=2)
+    handle = llm.submit(prompt, SamplingParams(max_tokens=2), request_id=1)
     # Block on the KV pools: the one-shot path is a single async jitted
     # dispatch, so without a sync the timer would measure dispatch
     # overhead, not the ingest itself (chunked syncs every token anyway).
     jax.block_until_ready((eng.pool.k_hbm, eng.pool.v_hbm))
     t_ingest = time.perf_counter() - t0
-    first = None
-    while first is None:
-        out = eng.step()
-        first = out.get(1)
+    handle.next_delta()                   # streaming first token
     ttft = time.perf_counter() - t0
     dispatches = eng.prefill_dispatches - d0
     tokens_per_s = (prompt_len - 1) / t_ingest if t_ingest else float("inf")
     return tokens_per_s, ttft, dispatches, t_ingest
+
+
+def sampled_decode(temperature: float, n_requests: int = 4,
+                   max_tokens: int = 16):
+    """Generation-API decode throughput at one temperature: submit
+    ``n_requests`` streaming handles, record time-to-first-delta on the
+    first, then drain everything.  ``temperature=0`` is the greedy
+    baseline the sampled run's overhead is reported against."""
+    _, model, params = _smoke_model()
+    llm = LLM(model, params, ServeConfig(
+        max_batch=4, page_size=4, hbm_pages=48, host_pages=64,
+        policy="gdt", interval_steps=8))
+    rng = np.random.default_rng(2)
+    prompts = [[int(t) for t in rng.integers(1, 256, 8)]
+               for _ in range(n_requests)]
+    sp = [SamplingParams(temperature=temperature, top_k=40, top_p=0.9,
+                         seed=i, max_tokens=max_tokens)
+          for i in range(n_requests)]
+    # Warm-up: compile the decode dispatch for this batch shape.
+    llm.generate(prompts[0], SamplingParams(temperature=temperature,
+                                            top_k=40, top_p=0.9,
+                                            max_tokens=2))
+    # Finish-reason counters are monotonic: baseline after the warm-up so
+    # the emitted counts cover exactly the measured requests.
+    base = llm.stats()
+    t0 = time.perf_counter()
+    handles = [llm.submit(p, s) for p, s in zip(prompts, sp)]
+    handles[0].next_delta()
+    ttfd = time.perf_counter() - t0
+    outs = [h.result() for h in handles]
+    wall = time.perf_counter() - t0
+    tokens = sum(len(o.token_ids) for o in outs)
+    stats = llm.stats()
+    reasons = {r: stats[f"finished_{r}"] - base[f"finished_{r}"]
+               for r in ("stop", "length", "truncated")}
+    return tokens / wall, ttfd, reasons, wall
 
 
 def run(quick: bool = False):
@@ -132,6 +173,23 @@ def run(quick: bool = False):
                      ttft * 1e6, ttft))
         rows.append((f"serve/prefill/{mode}/dispatches",
                      t_ingest * 1e6, dispatches))
+    # Generation API: sampled vs greedy decode through LLM.submit handles.
+    max_tokens = 8 if quick else 16
+    results = {}
+    for name, temp in (("greedy", 0.0), ("sampled", 0.8)):
+        tps, ttfd, reasons, wall = sampled_decode(temp,
+                                                  max_tokens=max_tokens)
+        results[name] = tps
+        rows.append((f"serve/generate/{name}/tokens_per_s", wall * 1e6, tps))
+        rows.append((f"serve/generate/{name}/ttfd_seconds", ttfd * 1e6,
+                     ttfd))
+        for reason in ("stop", "length", "truncated"):
+            rows.append((f"serve/generate/{name}/finished_{reason}",
+                         wall * 1e6, reasons[reason]))
+    # In-dispatch sampling overhead: greedy tokens/s over sampled tokens/s
+    # (~1.0 when the Gumbel/top-k/top-p epilogue fuses cleanly).
+    rows.append(("serve/generate/sampling_overhead_x", 0.0,
+                 results["greedy"] / max(results["sampled"], 1e-9)))
     return emit(rows)
 
 

@@ -1,7 +1,7 @@
 """Training benchmark: guided optimizer-state offload under an HBM budget.
 
 Runs the same smoke training twice — unconstrained vs a 60% HBM budget with
-OnlineGDT offload — and reports: loss parity (migration never changes
+guided offload (``GuidanceRuntime`` over an ``ArenaBackend``) — and reports: loss parity (migration never changes
 numerics), bytes migrated, and per-step transfer (rental) traffic.
 ``derived`` = final loss for loss rows; bytes for traffic rows."""
 

@@ -6,10 +6,11 @@ the ski-rental break-even rule decide when migration pays.
 """
 
 from repro.core import (
+    ArenaBackend,
     ArenaManager,
     CLX,
-    GDTConfig,
-    OnlineGDT,
+    GuidanceConfig,
+    GuidanceRuntime,
     SiteKind,
     SiteRegistry,
     recommend,
@@ -35,9 +36,11 @@ def main():
         print(f"  {a.site.label:16s} {a.resident_bytes/MB:5.0f} MiB  "
               f"fast={a.fast_fraction:.2f}")
 
-    gdt = OnlineGDT(mgr, CLX, GDTConfig(strategy="thermos",
-                                        fast_capacity_bytes=100 * MB,
-                                        interval_steps=1))
+    backend = ArenaBackend(mgr, CLX)
+    gdt = GuidanceRuntime(backend, CLX,
+                          GuidanceConfig(strategy="thermos",
+                                         fast_capacity_bytes=100 * MB,
+                                         interval_steps=1))
     print("\nintervals (10k accesses/interval to hot, 3k to warm, 10 cold):")
     for i in range(8):
         mgr.touch(hot, 200_000)
@@ -54,7 +57,7 @@ def main():
         print(f"  {a.site.label:16s} fast={a.fast_fraction:.2f}")
 
     # Compare the three MemBrain engines on the same profile.
-    prof = gdt.profiler.snapshot()
+    prof = backend.profiler.snapshot()
     print("\nrecommendation engines at 100 MiB capacity:")
     for strat in ("knapsack", "hotset", "thermos"):
         recs = recommend(prof, 100 * MB, strat)

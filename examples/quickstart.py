@@ -1,18 +1,19 @@
 """Quickstart: build an architecture from the registry, train a few steps on
-synthetic data, then decode from it — all on CPU in under a minute.
+synthetic data, then generate from it through the ``LLM`` front door — all
+on CPU in under a minute.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_smoke
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.optim import AdamW
+from repro.serve import LLM, SamplingParams
 from repro.train import Trainer, TrainerConfig
 
 
@@ -34,24 +35,13 @@ def main():
     print(f"trained {result['steps']} steps, "
           f"final loss {result['final_loss']:.3f}")
 
-    # --- decode ------------------------------------------------------------
-    cache = model.init_cache(1, 64)
-    tokens = [5, 42, 17]
-    decode = jax.jit(model.decode)
-    logits = None
-    for t, tok in enumerate(tokens):
-        logits, cache = decode(trainer.params, cache,
-                               jnp.asarray([[tok]], jnp.int32), jnp.int32(t))
-    out = []
-    pos = len(tokens)
-    for _ in range(8):
-        nxt = int(jnp.argmax(logits[0]))
-        out.append(nxt)
-        logits, cache = decode(trainer.params, cache,
-                               jnp.asarray([[nxt]], jnp.int32),
-                               jnp.int32(pos))
-        pos += 1
-    print("prompt:", tokens, "->", out)
+    # --- generate ----------------------------------------------------------
+    # The whole serving stack — paged KV cache, continuous batching, guided
+    # tiering — sits invisibly behind three lines:
+    llm = LLM(model, trainer.params)
+    out = llm.generate([5, 42, 17], SamplingParams(max_tokens=8))[0]
+    print("prompt:", out.prompt_token_ids, "->", out.token_ids,
+          f"({out.finish_reason})")
 
 
 if __name__ == "__main__":

@@ -3,6 +3,10 @@
 (thermos + age fragmentation + ski-rental + decay) places pages across
 HBM/host and is compared against LRU and FIFO eviction.
 
+Everything goes through the ``LLM`` front door — sessions are submitted
+handles, pause/resume are session controls, and the tier machinery stays
+invisible behind ``generate``/``submit``.
+
     PYTHONPATH=src python examples/serve_guided_kv.py
 """
 
@@ -13,35 +17,36 @@ import numpy as np
 
 from repro.configs import get_smoke
 from repro.models import build_model
-from repro.serve import Engine, ServeConfig
+from repro.serve import LLM, SamplingParams, ServeConfig
 
 
 def run_policy(model, params, policy: str):
-    eng = Engine(model, params, ServeConfig(
+    llm = LLM(model, params, ServeConfig(
         max_batch=2, page_size=4, hbm_pages=12, host_pages=160,
         policy=policy, interval_steps=4))
     rng = np.random.default_rng(0)
     prompt = [2, 7, 1, 8, 2, 8]
     for rid in range(4):
-        eng.add_request(rid, prompt, max_new=64)
-        eng.pause(rid)
+        llm.submit(prompt, SamplingParams(max_tokens=64), request_id=rid)
+        llm.pause(rid)
     hot, scan_id = [0, 1], 1000
     for r in range(10):
         for rid in hot:
-            eng.resume(rid)
-        if r % 5 == 4:
-            eng.resume(2 + (r // 5) % 2)
-        eng.step(); eng.step()
+            if llm.is_live(rid):
+                llm.resume(rid)
+        extra = 2 + (r // 5) % 2
+        if r % 5 == 4 and llm.is_live(extra):
+            llm.resume(extra)
+        llm.step(); llm.step()
         if r % 2 == 1:   # one-shot scan session (cache pollution attempt)
-            eng.add_request(scan_id,
-                            [int(t) for t in rng.integers(1, 400, 16)],
-                            max_new=2)
-            eng.step(); eng.step()
+            llm.submit([int(t) for t in rng.integers(1, 400, 16)],
+                       SamplingParams(max_tokens=2), request_id=scan_id)
+            llm.step(); llm.step()
             scan_id += 1
-        for rid in list(eng.requests):
-            if eng.requests[rid].state == "active":
-                eng.pause(rid)
-    return eng.stats()
+        for rid in list(llm.engine.requests):
+            if llm.engine.requests[rid].state == "active":
+                llm.pause(rid)
+    return llm.stats()
 
 
 def main():

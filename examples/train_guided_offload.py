@@ -16,7 +16,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import GDTConfig
+from repro.core import GuidanceConfig
 from repro.data import SyntheticLM
 from repro.models import build_model
 from repro.models.common import count_params
@@ -56,7 +56,7 @@ def main():
           f"HBM budget {budget/2**20:.0f} MiB "
           f"({args.budget_frac:.0%}) -> guidance must offload the rest")
 
-    gdt = GDTConfig(enabled=True, strategy="thermos",
+    gdt = GuidanceConfig(enabled=True, strategy="thermos",
                     fast_capacity_bytes=budget, interval_steps=10,
                     promotion_threshold=256 * 1024)
     opt = AdamW(lr=cosine_schedule(3e-3, warmup=steps // 10, total=steps))

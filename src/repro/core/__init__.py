@@ -35,7 +35,6 @@ from .runtime import (
 )
 from .sites import Site, SiteKind, SiteRegistry
 from .skirental import MigrationDecision, decide, get_purchase_cost, get_rental_cost
-from .tiering import GDTConfig, IntervalRecord, OnlineGDT
 
 __all__ = [
     "Arena",
@@ -47,17 +46,14 @@ __all__ = [
     "DEFAULT_PROMOTION_THRESHOLD",
     "FractionPlacer",
     "Fragment",
-    "GDTConfig",
     "GuidanceConfig",
     "GuidanceRuntime",
     "HardwareModel",
     "IntervalEvent",
     "IntervalProfile",
-    "IntervalRecord",
     "MigrationDecision",
     "MigrationPlan",
     "MoveStats",
-    "OnlineGDT",
     "OnlineProfiler",
     "RentalEvent",
     "Site",

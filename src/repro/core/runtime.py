@@ -21,14 +21,13 @@ Three backends ship with the framework: ``ArenaBackend`` (trainer path:
 ``serve.engine.PagedKVBackend`` (KV pages of the serving engine) and
 ``mem.simulator.SimArenaBackend`` (the calibrated reproduction rig).
 
-All telemetry that used to be scattered across consumers (``IntervalRecord``
-history, ``Engine.decisions``, swap-in counters) flows into one structured
-event stream (``events``: ``IntervalEvent`` / ``RentalEvent``) consumed by
-``launch.analysis.guidance_summary`` and the benchmarks.
+All telemetry that used to be scattered across consumers (per-interval
+record history, ``Engine.decisions``, swap-in counters) flows into one
+structured event stream (``events``: ``IntervalEvent`` / ``RentalEvent``)
+consumed by ``launch.analysis.guidance_summary`` and the benchmarks.
 
-``OnlineGDT`` (repro.core.tiering) remains as a deprecated thin alias for
-``GuidanceRuntime`` over an ``ArenaBackend``; see DESIGN.md for the
-migration note.
+The seed controller's deprecated alias (DESIGN.md §8) is gone: construct
+``GuidanceRuntime`` over the backend you need.
 """
 
 from __future__ import annotations
@@ -54,7 +53,7 @@ from .skirental import MigrationDecision, decide
 # ------------------------------------------------------------------ config
 @dataclasses.dataclass
 class GuidanceConfig:
-    """Knobs of Algorithm 1.  (``GDTConfig`` is a deprecated alias.)"""
+    """Knobs of Algorithm 1."""
 
     strategy: str = "thermos"           # paper default (Sec. 5.3)
     fast_capacity_bytes: int = 0        # budget for the fast tier
@@ -114,7 +113,7 @@ class MigrationPlan:
 # ------------------------------------------------------------------ events
 @dataclasses.dataclass
 class IntervalEvent:
-    """One MaybeMigrate invocation (absorbs the old ``IntervalRecord``)."""
+    """One MaybeMigrate invocation of the controller loop."""
 
     interval_index: int
     decision: MigrationDecision
@@ -253,7 +252,7 @@ class ArenaBackend:
 
 # ----------------------------------------------------------------- runtime
 class GuidanceRuntime:
-    """The OnlineGDT loop of Algorithm 1, driven by runtime step hooks.
+    """The online loop of Algorithm 1, driven by runtime step hooks.
 
     Host-side Python that runs *between* steps (the analogue of the paper's
     runtime thread waking at IntervalTime).  Owns interval gating, profile
@@ -328,8 +327,7 @@ class GuidanceRuntime:
         )
         # Keep the heavy plan payload only on the newest event: an engine
         # firing every interval for hours must not accumulate per-chunk
-        # telemetry in the history (scalars are kept forever, like the old
-        # IntervalRecord).
+        # telemetry in the history (scalar fields are kept forever).
         for prior in reversed(self.events):
             if getattr(prior, "kind", "") == "interval":
                 prior.plan = None

@@ -5,3 +5,5 @@
 #   ssd_scan.py        — intra-chunk SSD (Mamba2) block
 #   moe_gemm.py        — grouped-expert SwiGLU GEMM over sorted ragged
 #                        segments (dropless MoE dispatch)
+#   sampling.py        — batched Gumbel/top-k/top-p decode epilogue (one
+#                        fused jnp lowering; numpy oracle in ref.py)

@@ -96,6 +96,24 @@ def moe_grouped_ffn(x, w_gate, w_up, w_down, group_sizes,
                                   interpret=(mode == "interpret"))
 
 
+def sample_tokens(logits, seeds, positions, temperature, top_k, top_p):
+    """Batched in-dispatch token sampling (decode epilogue): temperature /
+    top-k / top-p filtering + Gumbel-max over (B, vocab) logits rows, with
+    per-row keys ``fold_in(PRNGKey(seed), position)`` so preempted or
+    re-prefilled requests replay identical streams.  ``temperature <= 0``
+    rows are bitwise-equal to ``argmax(logits)``.
+
+    Single lowering on every backend: the epilogue is a sort + cumsum +
+    argmax that XLA fuses into the logits consumer, so there is no separate
+    Pallas kernel to dispatch to — the numpy oracle for the test sweeps
+    lives in ``ref.sample_tokens_reference``.
+    """
+    from .sampling import sample_tokens as _sample_tokens
+
+    return _sample_tokens(logits, seeds, positions, temperature, top_k,
+                          top_p)
+
+
 def ssd_scan(x, dt, A, Bm, Cm):
     """Intra-chunk SSD block (one chunk).  Cross-chunk recurrence stays in
     models/ssm.py regardless of backend."""

@@ -128,6 +128,51 @@ def moe_grouped_ffn_reference(x, w_gate, w_up, w_down, group_sizes,
     return out.astype(x.dtype)
 
 
+# ------------------------------------------------------------ sampling
+def sample_tokens_reference(logits, seeds, positions, temperature, top_k,
+                            top_p) -> np.ndarray:
+    """Numpy oracle for ``kernels.sampling.sample_tokens``.
+
+    Reimplements the sampling math — temperature scaling, top-k rank
+    filter, top-p nucleus filter over the descending distribution,
+    Gumbel-max selection, greedy short-circuit at ``temperature <= 0`` —
+    independently in numpy, row by row.  Only the raw Gumbel bits are
+    shared (``kernels.sampling.gumbel_noise``): they are the PRNG's replay
+    contract, not sampling logic, and sharing them is what lets the sweep
+    tests demand *exact* token equality rather than a distribution test.
+    """
+    from .sampling import gumbel_noise
+
+    logits = np.asarray(logits)
+    B, V = logits.shape
+    seeds = np.asarray(seeds)
+    positions = np.asarray(positions)
+    temperature = np.asarray(temperature, np.float32)
+    top_k = np.asarray(top_k)
+    top_p = np.asarray(top_p, np.float32)
+    out = np.zeros((B,), np.int32)
+    for i in range(B):
+        row = logits[i].astype(np.float32)
+        if temperature[i] <= 0.0:
+            out[i] = int(np.argmax(row))
+            continue
+        scaled = row / max(float(temperature[i]), 1e-6)
+        order = np.argsort(-scaled, kind="stable")
+        ranked = scaled[order]
+        keep = np.ones((V,), bool)
+        if 0 < top_k[i] < V:
+            keep[int(top_k[i]):] = False
+        shifted = (ranked - ranked.max()).astype(np.float32)
+        probs = np.exp(shifted) / np.exp(shifted).sum(dtype=np.float32)
+        cum = np.cumsum(probs, dtype=np.float32)
+        keep &= (cum - probs) < float(top_p[i])     # rank 0 always kept
+        masked = np.where(keep, ranked, NEG_INF)
+        noise = np.asarray(
+            gumbel_noise(int(seeds[i]), int(positions[i]), V))
+        out[i] = int(order[np.argmax(masked + noise[order])])
+    return out
+
+
 # ------------------------------------------------------------- SSD scan
 def ssd_reference(x, dt, A, Bm, Cm) -> jax.Array:
     """Naive O(S^2) SSD (Mamba2) reference.

@@ -1,0 +1,89 @@
+"""Batched token sampling over logits rows — the decode epilogue.
+
+One fused formulation serves every backend: temperature scaling, top-k and
+top-p (nucleus) filtering over a single descending sort, and Gumbel-max
+selection, vectorized over the batch rows of the decode dispatch's logits.
+Unlike the attention/GEMM kernels there is no separate Pallas lowering —
+the whole epilogue is a sort + cumsum + argmax over (B, vocab) that XLA
+already fuses into the logits matmul's consumer; a hand-tiled kernel would
+buy nothing.  ``kernels/ref.py`` carries an independent numpy oracle
+(``sample_tokens_reference``) that the test sweeps assert against.
+
+Determinism contract (what serving correctness rests on):
+
+* Per-row randomness is ``fold_in(PRNGKey(seed), position)`` where
+  ``position`` is the token's absolute index in the request's stream
+  (prompt + generated).  A request that is preempted and recomputed, or
+  prefilled one-shot instead of chunked, re-samples every position with the
+  identical key — so replay produces the identical token sequence.
+* ``temperature <= 0`` rows take the plain ``argmax(logits)`` path,
+  bitwise-equal to greedy decoding (the pre-sampling engine behaviour).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+# Floor for the temperature divide on sampled rows; greedy rows never take
+# the sampled path, so this only guards against user temperatures denormal
+# enough to overflow the scale.
+_MIN_TEMP = 1e-6
+
+
+def gumbel_noise(seed, position, vocab: int) -> jax.Array:
+    """(vocab,) Gumbel(0,1) noise for one stream position of one request.
+
+    This construction IS the replay contract: kernel and numpy oracle both
+    draw their noise from here, so the oracle independently re-verifies the
+    sampling *math* (scaling, filtering, argmax) against shared bits.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), position)
+    return jax.random.gumbel(key, (vocab,), F32)
+
+
+def sample_tokens(logits, seeds, positions, temperature, top_k, top_p):
+    """Sample one token per logits row, inside the jitted decode dispatch.
+
+    logits: (B, V) — decode-step logits (inactive rows masked to zeros).
+    seeds/positions: (B,) int32 — per-request PRNG seed and the absolute
+      stream position of the token being sampled.
+    temperature: (B,) f32 — ``<= 0`` selects bitwise-greedy argmax.
+    top_k: (B,) int32 — keep the k highest-probability tokens (``<= 0`` or
+      ``>= V`` disables the filter).
+    top_p: (B,) f32 — nucleus filter: keep the smallest prefix of the
+      descending distribution whose cumulative probability reaches top_p
+      (``>= 1.0`` disables; the argmax token is always kept).
+
+    Returns (B,) int32 sampled token ids.
+    """
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    scaled = logits.astype(F32) / jnp.maximum(
+        temperature.astype(F32), _MIN_TEMP)[:, None]
+    # One descending sort feeds both filters.  Stable order so rank ties
+    # resolve to the lowest token id, matching the numpy oracle.
+    order = jnp.argsort(-scaled, axis=-1, stable=True)
+    ranked = jnp.take_along_axis(scaled, order, axis=-1)
+
+    ranks = jnp.arange(V, dtype=jnp.int32)[None, :]
+    k = jnp.where(top_k <= 0, V, top_k).astype(jnp.int32)[:, None]
+    keep_k = ranks < k
+    probs = jax.nn.softmax(ranked, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # Exclusive cumsum < top_p keeps the smallest covering prefix and always
+    # keeps rank 0, so the filter can never empty a row.
+    keep_p = (cum - probs) < top_p.astype(F32)[:, None]
+
+    keep = jnp.zeros((B, V), bool).at[
+        jnp.arange(B, dtype=jnp.int32)[:, None], order
+    ].set(keep_k & keep_p)
+    masked = jnp.where(keep, scaled, NEG_INF)
+
+    noise = jax.vmap(gumbel_noise, in_axes=(0, 0, None))(
+        seeds, positions, V)
+    sampled = jnp.argmax(masked + noise, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)

@@ -68,10 +68,12 @@ def serving_summary(engine) -> Dict[str, float]:
     (when guided) the controller's event stream.
 
     Engine-side scalars are prefixed ``engine_`` (swap and transfer probes,
-    prefill dispatch/token counts, admission/preemption/starvation totals);
-    guidance scalars keep the ``guidance_summary`` names.  Benchmarks and
-    reports read serving telemetry through this function rather than poking
-    at per-subsystem counters.
+    prefill dispatch/token counts, admission/preemption/starvation totals,
+    and the per-``finish_reason`` counts ``engine_finished_stop`` /
+    ``engine_finished_length`` / ``engine_finished_truncated``); guidance
+    scalars keep the ``guidance_summary`` names.  Benchmarks and reports
+    read serving telemetry through this function rather than poking at
+    per-subsystem counters.
     """
     out = {f"engine_{k}": float(v) for k, v in engine.stats().items()}
     if getattr(engine, "runtime", None) is not None:

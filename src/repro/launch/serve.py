@@ -1,12 +1,14 @@
 """Serving launcher: batched decode with guided KV-page tiering.
 
-Runs a synthetic multi-session workload against the paged engine and prints
-throughput + tiering telemetry.  Policies: gdt (the paper's machinery),
-lru, fifo.
+Runs a synthetic multi-session workload through the ``LLM`` front door
+(``serve.api``) and prints throughput + tiering telemetry, including
+per-``finish_reason`` totals.  Policies: gdt (the paper's machinery), lru,
+fifo.  ``--temperature/--top-k/--top-p`` switch the sessions from greedy
+decode to seeded sampling — the tier machinery underneath is identical.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
-      --sessions 8 --rounds 10 --policy gdt
+      --sessions 8 --rounds 10 --policy gdt --temperature 0.8
 """
 
 from __future__ import annotations
@@ -21,7 +23,8 @@ import numpy as np
 
 from ..configs import ARCHS, get, get_smoke
 from ..models import build_model
-from ..serve import Engine, ServeConfig
+from ..serve import LLM, SamplingParams, ServeConfig
+from .analysis import serving_summary
 
 
 def main():
@@ -37,6 +40,10 @@ def main():
     p.add_argument("--hbm-pages", type=int, default=24)
     p.add_argument("--host-pages", type=int, default=256)
     p.add_argument("--max-batch", type=int, default=2)
+    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--top-k", type=int, default=0)
+    p.add_argument("--top-p", type=float, default=1.0)
+    p.add_argument("--seed", type=int, default=0)
     args = p.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
@@ -45,37 +52,46 @@ def main():
     cfg = dataclasses.replace(cfg, remat=False)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    eng = Engine(model, params, ServeConfig(
+    llm = LLM(model, params, ServeConfig(
         max_batch=args.max_batch, page_size=args.page_size,
         hbm_pages=args.hbm_pages, host_pages=args.host_pages,
         policy=args.policy))
 
     rng = np.random.default_rng(0)
+    handles = {}
     for rid in range(args.sessions):
-        prompt = list(rng.integers(1, cfg.vocab, args.prompt_len))
-        eng.add_request(rid, [int(t) for t in prompt], max_new=args.max_new)
-        eng.pause(rid)
+        prompt = [int(t) for t in rng.integers(1, cfg.vocab, args.prompt_len)]
+        handles[rid] = llm.submit(prompt, SamplingParams(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=args.seed + rid,
+            max_tokens=args.max_new), request_id=rid)
+        llm.pause(rid)
 
     hot = list(range(min(2, args.sessions)))
     t0 = time.time()
     tokens = 0
     for r in range(args.rounds):
         for rid in hot:
-            eng.resume(rid)
-        if r % 3 == 2:
-            eng.resume((r // 3) % args.sessions)
+            if llm.is_live(rid):
+                llm.resume(rid)
+        extra = (r // 3) % args.sessions
+        if r % 3 == 2 and llm.is_live(extra):
+            llm.resume(extra)
         for _ in range(4):
-            tokens += len(eng.step())
-        for rid in list(eng.requests):
-            if eng.requests[rid].state == "active":
-                eng.pause(rid)
+            tokens += len(llm.step())
+        for rid in list(llm.engine.requests):
+            if llm.engine.requests[rid].state == "active":
+                llm.pause(rid)
     wall = time.time() - t0
-    stats = eng.stats()
+    stats = serving_summary(llm.engine)
     stats.update({
         "policy": args.policy,
+        "temperature": args.temperature,
         "tokens": tokens,
         "tokens_per_second": round(tokens / wall, 2),
         "wall_seconds": round(wall, 2),
+        "finished_streams": {
+            rid: h.finish_reason for rid, h in handles.items() if h.finished},
     })
     print(json.dumps(stats, indent=1))
 

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs import ARCHS, get, get_smoke
-from ..core import GDTConfig
+from ..core import GuidanceConfig
 from ..data import SyntheticLM
 from ..ft import HeartbeatMonitor
 from ..models import build_model
@@ -59,7 +59,7 @@ def main():
                                    total=args.steps))
     gdt = None
     if args.gdt_budget_mb:
-        gdt = GDTConfig(enabled=True, strategy="thermos",
+        gdt = GuidanceConfig(enabled=True, strategy="thermos",
                         fast_capacity_bytes=int(args.gdt_budget_mb * 2**20),
                         interval_steps=args.gdt_interval,
                         promotion_threshold=64 * 1024)

@@ -6,7 +6,7 @@ biases, per-head gate vectors) — the conventional grouping.
 
 Moments are first-class *allocation sites* for the paper's tiering runtime:
 ``moment_sites()`` groups them exactly like the parameter sites so the
-OnlineGDT controller can decide HBM-vs-host placement per group.  On the
+``GuidanceRuntime`` controller can decide HBM-vs-host placement per group.  On the
 production mesh their ``layers`` dimension additionally shards over the data
 axis (ZeRO-1 style) via the MOMENTS_RULES overlay in ``repro.dist.sharding``.
 """

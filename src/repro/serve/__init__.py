@@ -1,3 +1,4 @@
+from .api import DEFAULT_MAX_TOKENS, LLM, RequestHandle, RequestOutput
 from .engine import Engine, PagedKVBackend, Request, ServeConfig
 from .eviction import (
     EVICTION_POLICIES,
@@ -6,15 +7,21 @@ from .eviction import (
     register_eviction_policy,
 )
 from .kvcache import Page, PagedKVPool
+from .sampling import SamplingParams
 
 __all__ = [
+    "DEFAULT_MAX_TOKENS",
     "EVICTION_POLICIES",
     "Engine",
     "EvictionPolicy",
+    "LLM",
     "Page",
     "PagedKVBackend",
     "PagedKVPool",
     "Request",
+    "RequestHandle",
+    "RequestOutput",
+    "SamplingParams",
     "ServeConfig",
     "make_eviction_policy",
     "register_eviction_policy",

@@ -26,9 +26,23 @@ chunks.  The request lifecycle is explicit:
   recompute — deterministic re-prefill of prompt+generated on resume makes
   this lossless, *because* one-shot prefill == decode bitwise) when the
   wait-queue head needs logical pages.
-* **Finish** frees pages, prunes the request from ``engine.requests`` and
-  its pages from the eviction policy's ``last_recs`` view; results move to
-  ``engine.finished`` (drain with ``pop_finished``).
+* **Decoding** samples INSIDE the jitted dispatch (``ops.sample_tokens``):
+  each scheduled row's ``SamplingParams`` ride along as batched
+  temperature/top-k/top-p/seed arrays, and the per-row PRNG key folds the
+  token's absolute stream position — so preemption-by-recompute and
+  one-shot-vs-chunked prefill replay to identical sampled streams, and
+  ``temperature=0`` rows are bitwise-equal to greedy argmax.
+* **Finish** carries a reason — ``stop`` (a sampled token hit
+  ``SamplingParams.stop_token_ids``), ``length`` (``max_new`` /
+  ``max_tokens`` exhausted) or ``truncated`` (capacity) — frees pages,
+  prunes the request from ``engine.requests`` and its pages from the
+  eviction policy's ``last_recs`` view; results move to
+  ``engine.finished`` (drain with ``pop_finished``; per-reason totals in
+  ``stats()``).
+
+Most callers should not drive ``Engine`` directly: ``serve.api.LLM``
+(``generate`` / ``submit`` streaming handles) is the front door behind
+which all of this stays invisible.
 
 Algorithm 1 itself is NOT implemented here: the engine exposes its page pool
 to the shared controller through ``PagedKVBackend`` (a
@@ -60,6 +74,7 @@ from ..models.moe import moe_decode
 from ..models.transformer import Model
 from .eviction import make_eviction_policy
 from .kvcache import PagedKVPool
+from .sampling import DEFAULT_MAX_TOKENS, SamplingParams
 
 F32 = jnp.float32
 
@@ -93,11 +108,13 @@ class Request:
     request_id: int
     tokens: List[int]
     max_new: int
+    params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     generated: List[int] = dataclasses.field(default_factory=list)
     state: str = "waiting"   # waiting | active | paused | preempted | finished
     pos: int = 0                   # tokens written to KV so far
     last_scheduled: int = 0
     truncated: bool = False        # finished early for capacity, not EOS
+    finish_reason: Optional[str] = None   # stop | length | truncated
 
     @property
     def context(self) -> List[int]:
@@ -250,7 +267,8 @@ class Engine:
                     num_fragments=cfg.num_fragments,
                     skip_empty_intervals=True),
                 clock=lambda: self.step_count)
-        self._decode = jax.jit(self._build_decode())
+        self._decode_greedy = jax.jit(self._build_decode(with_sampler=False))
+        self._decode_sampled = jax.jit(self._build_decode(with_sampler=True))
         self._prefill = jax.jit(self._build_prefill())
         self.last_logits: Dict[int, np.ndarray] = {}
         # --------------------------------------------------- counters
@@ -261,6 +279,10 @@ class Engine:
         self.preemptions = 0           # paused requests evicted wholesale
         self.starved_steps = 0         # request-steps skipped for capacity
         self.truncations = 0           # requests finished early for capacity
+        # Per-finish_reason totals (monotonic — surviving pop_finished
+        # drains), reported through stats() and serving_summary.
+        self.finish_counts: Dict[str, int] = {
+            "stop": 0, "length": 0, "truncated": 0}
 
     # ------------------------------------------------- telemetry shims
     @property
@@ -329,17 +351,29 @@ class Engine:
         return x, kp, vp
 
     # ========================================================= jit decode
-    def _build_decode(self):
+    def _build_decode(self, with_sampler: bool):
+        """Two jitted variants share one body: the greedy variant's epilogue
+        is a plain ``argmax`` (bitwise the pre-sampling engine, zero
+        sampling overhead on the default path); the sampled variant runs
+        the full in-dispatch sampler.  They agree bitwise on greedy rows
+        (the sampler short-circuits ``temperature<=0`` to the same argmax),
+        so the scheduler picks per batch and each compiles only on first
+        use — a pure-greedy workload never compiles the sampled path."""
         model = self.model
         acfg = model.attn_cfg
-        from ..kernels.ops import paged_attention
+        from ..kernels.ops import paged_attention, sample_tokens
 
         def step(params, k_pool, v_pool, tokens, page_table, lengths,
-                 write_slot, write_off, active):
+                 write_slot, write_off, active, seeds, temperature, top_k,
+                 top_p):
             """tokens: (B,1); page_table: (B,MP) HBM slots or -1;
             lengths: (B,) incl. new token; write_slot/off: (B,) where the
             new token's KV goes; active: (B,) bool — inactive rows are
-            masked to deterministic zeros rather than carrying garbage."""
+            masked to deterministic zeros rather than carrying garbage;
+            seeds/temperature/top_k/top_p: (B,) per-request sampling knobs
+            (the sampler runs INSIDE this dispatch, with the next token's
+            stream position ``lengths`` as the PRNG fold — the replay
+            contract)."""
             x = jnp.take(params["embed"]["tok"], tokens, axis=0)  # (B,1,d)
 
             def body(carry, xs):
@@ -359,7 +393,12 @@ class Engine:
             x = rmsnorm(params["final_ln"], x)
             logits = lm_head(params["head"], x)[:, 0]
             logits = jnp.where(active[:, None], logits, 0.0)
-            return logits, nk, nv
+            if with_sampler:
+                next_tokens = sample_tokens(logits, seeds, lengths,
+                                            temperature, top_k, top_p)
+            else:
+                next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return logits, next_tokens, nk, nv
 
         return step
 
@@ -404,13 +443,23 @@ class Engine:
 
     # ========================================================== requests
     def add_request(self, request_id: int, prompt: List[int],
-                    max_new: int = 8) -> None:
+                    max_new: Optional[int] = None,
+                    params: Optional[SamplingParams] = None) -> None:
         """Validate and enqueue; admission happens immediately if the pool
-        has room, else at a later ``step()``."""
+        has room, else at a later ``step()``.  ``params`` carries the
+        request's sampling/stop behaviour.  The generation budget resolves
+        HERE and nowhere else: ``params.max_tokens`` when set, else
+        ``max_new``, else ``DEFAULT_MAX_TOKENS``."""
         if request_id in self.requests or request_id in self.finished:
             raise ValueError(f"duplicate request_id {request_id}")
         if not prompt:
             raise ValueError("empty prompt")
+        if params is None:
+            params = SamplingParams()
+        if params.max_tokens is not None:
+            max_new = params.max_tokens
+        elif max_new is None:
+            max_new = DEFAULT_MAX_TOKENS
         P = self.cfg.page_size
         MP = self.cfg.max_pages_per_seq
         total_tokens = len(prompt) - 1 + max_new   # tokens written to KV
@@ -430,25 +479,50 @@ class Engine:
                 f"HBM pages exist (hbm_pages={self.cfg.hbm_pages} minus the "
                 f"scratch slot); raise ServeConfig.hbm_pages")
         req = Request(request_id=request_id, tokens=list(prompt),
-                      max_new=max_new)
+                      max_new=max_new, params=params)
         self.requests[request_id] = req
         self.wait_queue.append(request_id)
         self._admit_waiting()
 
-    def pause(self, request_id: int):
-        req = self.requests.get(request_id)
-        if req is not None and req.state == "active":
-            req.state = "paused"
-
-    def resume(self, request_id: int):
+    # The explicit lifecycle contract (DESIGN.md §7): transitions outside
+    # it raise a named ValueError instead of silently mutating queue state.
+    #   pause:  active -> paused; paused -> no-op (idempotent);
+    #           anything else raises.
+    #   resume: paused -> active; preempted -> waiting (re-enqueue);
+    #           active/waiting -> no-op (already running / already queued);
+    #           finished or unknown ids raise.
+    def _lookup(self, request_id: int, verb: str) -> Request:
         req = self.requests.get(request_id)
         if req is None:
-            return
+            if request_id in self.finished:
+                raise ValueError(
+                    f"cannot {verb} request {request_id}: already finished "
+                    f"(drain the result with pop_finished)")
+            raise ValueError(
+                f"cannot {verb} request {request_id}: unknown id")
+        return req
+
+    def pause(self, request_id: int):
+        req = self._lookup(request_id, "pause")
+        if req.state == "paused":
+            return                       # idempotent
+        if req.state != "active":
+            raise ValueError(
+                f"cannot pause request {request_id} in state "
+                f"{req.state!r}: only active requests pause (a "
+                f"{req.state} request holds no schedulable position)")
+        req.state = "paused"
+
+    def resume(self, request_id: int):
+        req = self._lookup(request_id, "resume")
+        if req.state in ("active", "waiting"):
+            return                       # idempotent / already queued
         if req.state == "paused":
             req.state = "active"
         elif req.state == "preempted":
             # Pages were dropped; re-prefill via the admission path (exact:
-            # one-shot prefill == decode bitwise, and decoding is greedy).
+            # one-shot prefill == decode bitwise, and sampling folds the
+            # absolute stream position, so replay resamples identically).
             req.state = "waiting"
             self.wait_queue.append(request_id)
             self._admit_waiting()
@@ -481,7 +555,7 @@ class Engine:
                 # fast tier can never decode again: finish it, don't wedge
                 # the queue head forever.
                 self.wait_queue.popleft()
-                self._finish(req, truncated=True)
+                self._finish(req, reason="truncated")
                 continue
             # Admit with one page of growth slack (capped at the request's
             # real lifetime need), so an admitted request can always decode
@@ -534,7 +608,7 @@ class Engine:
         if not holders:
             return
         if len(active) == 1 and holders == active:
-            self._finish(active[0], truncated=True)
+            self._finish(active[0], reason="truncated")
             return
         victim = holders[-1]
         self._release_pages(victim.request_id)
@@ -674,7 +748,7 @@ class Engine:
             need = max(n_pages, r.pos // P + 1)
             if need > self.usable_hbm_pages:
                 # Outgrew the fast tier entirely: can never decode again.
-                self._finish(r, truncated=True)
+                self._finish(r, reason="truncated")
                 continue
             grow = need - n_pages
             if need > hbm_budget or grow > logical_budget:
@@ -706,27 +780,37 @@ class Engine:
             for r, t in zip(sched, toks):
                 r.generated.append(int(t))
                 out[r.request_id] = int(t)
-                if len(r.generated) >= r.max_new:
-                    self._finish(r)
+                if int(t) in r.params.stop_token_ids:
+                    self._finish(r, reason="stop")
+                elif len(r.generated) >= r.max_new:
+                    self._finish(r, reason="length")
         if self.runtime is not None:
             self.runtime.on_step()        # MaybeMigrate at the interval
         return out
 
-    def _finish(self, req: Request, truncated: bool = False):
+    def _finish(self, req: Request, reason: str = "length"):
         """Lifecycle cleanup: free pages, prune the live tables (requests,
-        eviction recs, logits), park the result in ``finished``."""
+        eviction recs, logits), park the result in ``finished`` with its
+        ``finish_reason`` (stop | length | truncated)."""
+        assert reason in ("stop", "length", "truncated"), reason
         self._release_pages(req.request_id)
         req.state = "finished"
-        req.truncated = truncated
-        if truncated:
+        req.finish_reason = reason
+        req.truncated = reason == "truncated"
+        if req.truncated:
             self.truncations += 1
+        self.finish_counts[reason] += 1
         self.requests.pop(req.request_id, None)
         self.last_logits.pop(req.request_id, None)
         self.finished[req.request_id] = req
 
     def _run_batch(self, pairs) -> List[int]:
         """Decode one batch.  Pages are already resident and write pages
-        allocated (``_prepare_batch``)."""
+        allocated (``_prepare_batch``).  The next token comes back sampled
+        from inside the jitted dispatch: each row's ``SamplingParams`` ride
+        along as batched arrays, and the PRNG folds the row's absolute
+        stream position (== ``lengths``), so a preempted-and-recomputed
+        request resamples the identical stream."""
         B = self.cfg.max_batch
         MP = self.cfg.max_pages_per_seq
         tokens = np.zeros((B, 1), np.int32)
@@ -735,6 +819,10 @@ class Engine:
         wslot = np.full((B,), self.scratch_slot, np.int32)
         woff = np.zeros((B,), np.int32)
         active = np.zeros((B,), bool)
+        seeds = np.zeros((B,), np.int32)
+        temperature = np.zeros((B,), np.float32)   # 0 = greedy argmax
+        top_k = np.zeros((B,), np.int32)
+        top_p = np.ones((B,), np.float32)
         for i, (req, tok) in enumerate(pairs):
             req.last_scheduled = self.step_count
             slot, off = self._page_for_write(req)
@@ -748,16 +836,40 @@ class Engine:
             wslot[i] = slot
             woff[i] = off
             active[i] = True
-        logits, nk, nv = self._decode(
+            sp = req.params
+            # seed=None means "independent stream per request": derive from
+            # the request id so identical prompts in one batch do not
+            # sample bitwise-identical tokens, while replay (same request
+            # id, same positions) stays exact.  Auto-derived seeds live in
+            # the int32 SIGN-BIT half of the space — explicit seeds are
+            # validated to [0, 2**31), so a user seed can never alias a
+            # request-id-derived stream.
+            if sp.seed is not None:
+                seeds[i] = sp.seed
+            else:
+                seeds[i] = (0x80000000 | (req.request_id & 0x7FFFFFFF)) \
+                    - (1 << 32)
+            temperature[i] = sp.temperature
+            top_k[i] = sp.top_k
+            top_p[i] = sp.top_p
+        # Greedy-only batches (the default) take the argmax-epilogue
+        # variant: no sort/cumsum/Gumbel work on the hot path, and the
+        # sampled variant is never even compiled unless someone samples.
+        decode = (self._decode_greedy
+                  if all(req.params.greedy for req, _ in pairs)
+                  else self._decode_sampled)
+        logits, toks, nk, nv = decode(
             self.params, self.pool.k_hbm, self.pool.v_hbm,
             jnp.asarray(tokens), jnp.asarray(table), jnp.asarray(lengths),
-            jnp.asarray(wslot), jnp.asarray(woff), jnp.asarray(active))
+            jnp.asarray(wslot), jnp.asarray(woff), jnp.asarray(active),
+            jnp.asarray(seeds), jnp.asarray(temperature),
+            jnp.asarray(top_k), jnp.asarray(top_p))
         self.pool.k_hbm, self.pool.v_hbm = nk, nv
         if self.cfg.keep_logits:
             logits_np = np.asarray(logits)
             for i, (req, _) in enumerate(pairs):
                 self.last_logits[req.request_id] = logits_np[i]
-        toks = np.asarray(jnp.argmax(logits, axis=-1))
+        toks = np.asarray(toks)
         return [int(toks[i]) for i in range(len(pairs))]
 
     # --------------------------------------------------------- telemetry
@@ -778,4 +890,7 @@ class Engine:
             "preemptions": self.preemptions,
             "starved_steps": self.starved_steps,
             "truncations": self.truncations,
+            "finished_stop": self.finish_counts["stop"],
+            "finished_length": self.finish_counts["length"],
+            "finished_truncated": self.finish_counts["truncated"],
         }

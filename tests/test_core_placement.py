@@ -4,7 +4,15 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import ArenaManager, CLX, GDTConfig, OnlineGDT, SiteKind, SiteRegistry
+from repro.core import (
+    ArenaBackend,
+    ArenaManager,
+    CLX,
+    GuidanceConfig,
+    GuidanceRuntime,
+    SiteKind,
+    SiteRegistry,
+)
 from repro.core.placement import JaxArenaPlacer, memory_kind_of
 
 MB = 2**20
@@ -31,9 +39,9 @@ def build(cap_bytes, first_touch=False):
         fast_capacity_bytes=cap_bytes if first_touch else None,
     )
     placer = JaxArenaPlacer(mgr)
-    gdt = OnlineGDT(
-        mgr, CLX, GDTConfig(fast_capacity_bytes=cap_bytes, interval_steps=1),
-        placer=placer,
+    gdt = GuidanceRuntime(
+        ArenaBackend(mgr, CLX, placer=placer), CLX,
+        GuidanceConfig(fast_capacity_bytes=cap_bytes, interval_steps=1),
     )
     return reg, mgr, placer, gdt
 

@@ -1,10 +1,12 @@
-"""Integration tests for the OnlineGDT controller loop."""
+"""Integration tests for the Algorithm-1 controller loop
+(``GuidanceRuntime`` over an ``ArenaBackend``)."""
 
 from repro.core import (
+    ArenaBackend,
     ArenaManager,
     CLX,
-    GDTConfig,
-    OnlineGDT,
+    GuidanceConfig,
+    GuidanceRuntime,
     SiteKind,
     SiteRegistry,
 )
@@ -19,10 +21,10 @@ def build_runtime(cap_bytes, interval=1, strategy="thermos", first_touch=False):
         promotion_threshold=1 * MB,
         fast_capacity_bytes=cap_bytes if first_touch else None,
     )
-    gdt = OnlineGDT(
-        mgr,
+    gdt = GuidanceRuntime(
+        ArenaBackend(mgr, CLX),
         CLX,
-        GDTConfig(
+        GuidanceConfig(
             strategy=strategy, fast_capacity_bytes=cap_bytes, interval_steps=interval
         ),
     )
@@ -111,7 +113,8 @@ def test_first_touch_spill_accounting():
 def test_disabled_gdt_is_inert():
     reg = SiteRegistry()
     mgr = ArenaManager(reg)
-    gdt = OnlineGDT(mgr, CLX, GDTConfig(enabled=False, fast_capacity_bytes=1))
+    gdt = GuidanceRuntime(ArenaBackend(mgr, CLX), CLX,
+                          GuidanceConfig(enabled=False, fast_capacity_bytes=1))
     s = reg.register(["x"])
     mgr.allocate(s, 100 * MB)
     for _ in range(20):
@@ -130,4 +133,4 @@ def test_telemetry_accumulates():
     assert gdt.migration_count >= 1
     assert gdt.total_bytes_migrated >= 10 * MB
     assert len(gdt.history) == 50
-    assert gdt.profiler.mean_collection_seconds >= 0.0
+    assert gdt.backend.profiler.mean_collection_seconds >= 0.0

@@ -1,0 +1,394 @@
+"""Front-door generation API tests: ``LLM.generate``/``submit`` blocking and
+streaming semantics, greedy bitwise-equality with the contiguous-cache
+reference on dense + MoE configs, sampled preemption-replay determinism
+(the PR's extension of the bitwise-equality invariant from logits to
+tokens), and finish reasons end-to-end through ``pop_finished``,
+``stats()`` and ``serving_summary``."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.launch.analysis import serving_summary
+from repro.models import build_model
+from repro.serve import (
+    DEFAULT_MAX_TOKENS,
+    Engine,
+    LLM,
+    SamplingParams,
+    ServeConfig,
+)
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = dataclasses.replace(get_smoke("llama3_2_1b"), remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+@pytest.fixture(scope="module")
+def moe_model_and_params():
+    cfg = dataclasses.replace(get_smoke("granite_moe_3b_a800m"), remat=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return model, params
+
+
+def greedy_reference(model, params, prompt, n_new, cache_len=64):
+    """Contiguous-cache greedy decode (the model's own serve path)."""
+    cache = model.init_cache(1, cache_len)
+    logits = None
+    for t, tok in enumerate(prompt):
+        logits, cache = jax.jit(model.decode)(
+            params, cache, jnp.asarray([[tok]], jnp.int32), jnp.int32(t))
+    out = []
+    pos = len(prompt)
+    for _ in range(n_new):
+        nxt = int(jnp.argmax(logits[0]))
+        out.append(nxt)
+        logits, cache = jax.jit(model.decode)(
+            params, cache, jnp.asarray([[nxt]], jnp.int32), jnp.int32(pos))
+        pos += 1
+    return out
+
+
+def small_cfg(**kw):
+    base = dict(max_batch=2, page_size=4, hbm_pages=32, host_pages=64,
+                policy="gdt", interval_steps=4)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+# ===================================================== greedy equivalence
+@pytest.mark.parametrize("family", ["dense", "moe"])
+def test_generate_greedy_bitwise_equals_reference(
+        family, model_and_params, moe_model_and_params):
+    """``LLM.generate`` at temperature=0 (the default) is bitwise-equal to
+    the contiguous-cache greedy decode — the acceptance equality that makes
+    the new front door a strict superset of the old engine."""
+    model, params = (model_and_params if family == "dense"
+                     else moe_model_and_params)
+    prompt = [5, 17, 133, 42, 7, 99, 250, 3]
+    ref = greedy_reference(model, params, prompt, 6)
+    llm = LLM(model, params, small_cfg())
+    out = llm.generate([prompt], SamplingParams(max_tokens=6))[0]
+    assert out.token_ids == ref
+    assert out.finish_reason == "length"
+    assert out.prompt_token_ids == prompt
+
+
+# =============================================== sampled replay invariants
+def test_sampled_preemption_replay_identical_stream(model_and_params):
+    """A seeded sampled request preempted mid-generation (all pages
+    dropped, prompt+generated recomputed on resume) finishes with the
+    IDENTICAL token stream as a never-preempted twin: the per-token PRNG
+    folds the absolute stream position, so recompute never resamples
+    history and continues exactly where it left off."""
+    model, params = model_and_params
+    prompt_a = [3, 1, 4, 1, 5, 9]
+    prompt_b = [2, 7, 1, 8, 2, 8, 1, 8]
+    sp = SamplingParams(temperature=0.9, top_k=50, top_p=0.95, seed=123,
+                        max_tokens=4)
+
+    twin = Engine(model, params,
+                  ServeConfig(max_batch=1, page_size=2, hbm_pages=16,
+                              host_pages=32))
+    twin.add_request(0, prompt_a, params=sp)
+    while 0 in twin.requests:
+        twin.step()
+
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=1, page_size=2, hbm_pages=7,
+                             host_pages=1))
+    eng.add_request(0, prompt_a, params=sp)
+    eng.step()                                    # sample 1 token
+    eng.pause(0)
+    eng.add_request(1, prompt_b, max_new=2)       # forces full preemption
+    assert eng.preemptions >= 1
+    assert eng.requests[0].state == "preempted"
+    while 1 in eng.requests:
+        eng.step()
+    eng.resume(0)                                 # re-prefill + continue
+    while 0 in eng.requests:
+        eng.step()
+    assert eng.finished[0].generated == twin.finished[0].generated
+    # And the stream is genuinely sampled, not greedy-by-accident.
+    greedy = greedy_reference(model, params, prompt_a, 4)
+    assert twin.finished[0].generated != greedy or sp.temperature == 0
+
+
+def test_sampled_one_shot_prefill_equals_chunked(model_and_params):
+    """The prefill-mode invariant extends from logits to sampled tokens: a
+    temperature>0 request decodes the identical stream whether its prompt
+    was ingested in one dispatch or stepped through decode."""
+    model, params = model_and_params
+    prompt = [5, 17, 133, 42, 7, 99, 250, 3, 11, 29]
+    sp = SamplingParams(temperature=0.8, top_k=40, top_p=0.9, seed=7,
+                        max_tokens=5)
+    streams = {}
+    for mode in ("one_shot", "chunked"):
+        llm = LLM(model, params, small_cfg(prefill=mode))
+        streams[mode] = llm.generate([prompt], sp)[0].token_ids
+    assert streams["one_shot"] == streams["chunked"]
+
+
+def test_default_seed_gives_independent_streams_per_request(
+        model_and_params):
+    """seed=None (the default) folds the request id: identical prompts
+    submitted as different requests sample independent streams, while an
+    explicit shared seed makes them bitwise-identical."""
+    model, params = model_and_params
+    prompt = [5, 17, 133, 42]
+    llm = LLM(model, params, small_cfg(max_batch=4, hbm_pages=48))
+    a, b = llm.generate([prompt, prompt],
+                        SamplingParams(temperature=1.0, max_tokens=8))
+    assert a.token_ids != b.token_ids, \
+        "default-seeded twins must not collide streams"
+    c, d = llm.generate([prompt, prompt],
+                        SamplingParams(temperature=1.0, seed=5,
+                                       max_tokens=8))
+    assert c.token_ids == d.token_ids, \
+        "an explicit shared seed must reproduce the stream"
+
+
+def test_auto_seed_is_replayable_but_never_aliases_explicit_seeds(
+        model_and_params):
+    """Auto-derived seeds (seed=None) are a pure function of the request
+    id — same id replays the same stream across engines — but live in a
+    domain explicit seeds can't reach: request_id=5 with seed=None must
+    NOT sample the same stream as an explicit seed=5."""
+    model, params = model_and_params
+    prompt = [5, 17, 133, 42]
+    sp_auto = SamplingParams(temperature=1.0, max_tokens=6)
+
+    def run_rid5(sp):
+        llm = LLM(model, params, small_cfg())
+        return llm.submit(prompt, sp, request_id=5).result().token_ids
+
+    assert run_rid5(sp_auto) == run_rid5(sp_auto), \
+        "auto seed must replay deterministically per request id"
+    explicit = run_rid5(SamplingParams(temperature=1.0, seed=5,
+                                       max_tokens=6))
+    assert run_rid5(sp_auto) != explicit, \
+        "auto seed domain must not alias explicit seed space"
+
+
+def test_mixed_direct_and_llm_stepping_streams_exact_tokens(
+        model_and_params):
+    """Interleaving direct engine.step() with llm.step() must deliver the
+    request's generated stream exactly once, in order — routing reconciles
+    by cursor against req.generated, not by counting routed calls."""
+    model, params = model_and_params
+    llm = LLM(model, params, small_cfg())
+    handle = llm.submit([5, 17, 133, 42], SamplingParams(max_tokens=4))
+    llm.engine.step()                  # t1 generated behind llm's back
+    llm.step()                         # t2 routed; t1 reconciled first
+    while not handle.finished and llm.engine.requests:
+        llm.step()
+    deltas = list(handle)
+    want = handle.token_ids
+    assert len(want) == 4
+    assert [t for t, _ in deltas] == want, "dup/dropped deltas"
+    assert [r for _, r in deltas] == [None] * 3 + ["length"]
+
+
+def test_mixed_greedy_sampled_batch_keeps_greedy_rows_bitwise(
+        model_and_params):
+    """A greedy request batched WITH a sampled one must decode bitwise the
+    tokens it gets alone — the per-batch greedy/sampled dispatch split and
+    the sampler's per-row short-circuit both protect it."""
+    model, params = model_and_params
+    prompt = [5, 17, 133, 42]
+    llm = LLM(model, params, small_cfg(max_batch=4, hbm_pages=48))
+    alone = llm.generate([prompt], SamplingParams(max_tokens=6))[0]
+    outs = llm.generate(
+        [prompt, [7, 99, 250, 3]],
+        [SamplingParams(max_tokens=6),
+         SamplingParams(temperature=1.0, max_tokens=6)])
+    assert outs[0].token_ids == alone.token_ids
+
+
+# ======================================================== finish reasons
+def test_stop_token_finish_reason_end_to_end(model_and_params):
+    """A stop-token hit reports ``finish_reason="stop"`` through every
+    telemetry surface: the RequestOutput, ``pop_finished``, ``stats()``
+    and ``analysis.serving_summary``."""
+    model, params = model_and_params
+    prompt = [5, 17, 133, 42]
+    ref = greedy_reference(model, params, prompt, 6)
+    stop_tok = ref[2]
+
+    llm = LLM(model, params, small_cfg())
+    out = llm.generate([prompt], SamplingParams(
+        max_tokens=6, stop_token_ids=(stop_tok,)))[0]
+    assert out.finish_reason == "stop"
+    assert out.token_ids == ref[:3], "stop token is included, then stops"
+
+    # Engine level: pop_finished carries the reason.
+    eng = Engine(model, params, small_cfg())
+    eng.add_request(0, prompt, params=SamplingParams(
+        max_tokens=6, stop_token_ids=(stop_tok,)))
+    while 0 in eng.requests:
+        eng.step()
+    req = eng.pop_finished(0)
+    assert req.finish_reason == "stop"
+    assert not req.truncated
+    assert eng.stats()["finished_stop"] == 1
+    assert eng.stats()["finished_length"] == 0
+    summary = serving_summary(eng)
+    assert summary["engine_finished_stop"] == 1.0
+    assert summary["engine_finished_truncated"] == 0.0
+
+
+def test_truncated_finish_reason(model_and_params):
+    """A request alone against a pool it outgrows finishes with
+    ``finish_reason="truncated"`` (and counts in stats)."""
+    model, params = model_and_params
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=1, page_size=2, hbm_pages=4,
+                             host_pages=0))       # 3 usable HBM pages
+    eng.add_request(0, [1, 2, 3, 4, 5], max_new=8)   # needs 6 pages to end
+    for _ in range(20):
+        eng.step()
+        if 0 in eng.finished:
+            break
+    assert eng.finished[0].finish_reason == "truncated"
+    assert eng.finished[0].truncated
+    assert eng.stats()["finished_truncated"] == 1
+
+
+def test_length_finish_reason_via_pop_finished_all(model_and_params):
+    model, params = model_and_params
+    eng = Engine(model, params, small_cfg())
+    eng.add_request(0, [1, 2, 3], max_new=2)
+    while eng.requests:
+        eng.step()
+    drained = eng.pop_finished()
+    assert drained[0].finish_reason == "length"
+    assert not eng.finished
+
+
+# ============================================================== streaming
+def test_streaming_handle_deltas(model_and_params):
+    """The handle streams one ``(token, None)`` delta per generated token,
+    with the finish reason attached to the final delta only — and matches
+    the blocking path bitwise."""
+    model, params = model_and_params
+    prompt = [5, 17, 133, 42]
+    n_new = 5
+    ref = greedy_reference(model, params, prompt, n_new)
+    llm = LLM(model, params, small_cfg())
+    handle = llm.submit(prompt, SamplingParams(max_tokens=n_new))
+    deltas = list(handle)
+    assert [t for t, _ in deltas] == ref
+    assert [r for _, r in deltas] == [None] * (n_new - 1) + ["length"]
+    assert handle.finished and handle.finish_reason == "length"
+    assert handle.token_ids == ref
+    out = handle.result()                  # idempotent after exhaustion
+    assert out.token_ids == ref and out.finish_reason == "length"
+
+
+def test_streaming_interleaves_with_other_requests(model_and_params):
+    """Iterating one handle drives the shared engine: a second in-flight
+    request finishes on its own while the first is being consumed."""
+    model, params = model_and_params
+    llm = LLM(model, params, small_cfg())
+    slow = llm.submit([5, 17, 133, 42], SamplingParams(max_tokens=8))
+    fast = llm.submit([7, 99, 250], SamplingParams(max_tokens=2))
+    list(slow)
+    assert fast.finished and len(fast.token_ids) == 2
+
+
+def test_streaming_paused_request_raises_instead_of_spinning(
+        model_and_params):
+    model, params = model_and_params
+    llm = LLM(model, params, small_cfg())
+    handle = llm.submit([5, 17, 133], SamplingParams(max_tokens=4))
+    llm.pause(handle.request_id)
+    with pytest.raises(RuntimeError, match="paused"):
+        handle.next_delta()
+    llm.resume(handle.request_id)
+    assert handle.result().finish_reason == "length"
+
+
+# ========================================================== generate API
+def test_generate_batch_order_and_per_prompt_params(model_and_params):
+    model, params = model_and_params
+    prompts = [[5, 17, 133, 42], [7, 99, 250, 3], [11, 29, 31, 2]]
+    plist = [SamplingParams(max_tokens=2),
+             SamplingParams(max_tokens=4),
+             SamplingParams(max_tokens=3)]
+    llm = LLM(model, params, small_cfg(max_batch=4, hbm_pages=48))
+    outs = llm.generate(prompts, plist)
+    assert [o.prompt_token_ids for o in outs] == prompts
+    assert [len(o.token_ids) for o in outs] == [2, 4, 3]
+    assert all(o.finish_reason == "length" for o in outs)
+    with pytest.raises(ValueError, match="SamplingParams"):
+        llm.generate(prompts, plist[:2])
+
+
+def test_generate_flat_prompt_and_default_budget(model_and_params):
+    model, params = model_and_params
+    llm = LLM(model, params, small_cfg())
+    outs = llm.generate([5, 17, 133])      # single flat prompt
+    assert len(outs) == 1
+    assert len(outs[0].token_ids) == DEFAULT_MAX_TOKENS
+    # numpy token ids (the benches' idiom) are one prompt too, not a batch.
+    np_out = llm.generate(list(np.asarray([5, 17, 133], np.int64)),
+                          SamplingParams(max_tokens=2))
+    assert len(np_out) == 1 and np_out[0].prompt_token_ids == [5, 17, 133]
+
+
+def test_finished_handles_leave_the_routing_table(model_and_params):
+    """The API layer must not reintroduce the finished-request leak: a
+    long-lived LLM holds one handle per LIVE request only."""
+    model, params = model_and_params
+    llm = LLM(model, params, small_cfg())
+    for batch in range(3):
+        llm.generate([[1 + batch, 2, 3], [4, 5, 6 + batch]],
+                     SamplingParams(max_tokens=2))
+        assert not llm._handles, "finished handles must be pruned"
+    assert not llm.engine.finished, "generate() drains the engine"
+
+
+def test_handle_raises_when_result_drained_behind_its_back(
+        model_and_params):
+    model, params = model_and_params
+    llm = LLM(model, params, small_cfg())
+    handle = llm.submit([5, 17, 133], SamplingParams(max_tokens=2))
+    while llm.engine.requests:
+        llm.engine.step()              # bypass llm.step bookkeeping
+    llm.engine.pop_finished(handle.request_id)
+    with pytest.raises(RuntimeError, match="pop_finished"):
+        list(handle)
+
+
+def test_direct_engine_stepping_still_streams_all_tokens(model_and_params):
+    """Driving the engine directly (bypassing llm.step's routing) must not
+    lose deltas: the finish reconciliation replays the authoritative
+    generated stream onto the handle."""
+    model, params = model_and_params
+    llm = LLM(model, params, small_cfg())
+    handle = llm.submit([5, 17, 133, 42], SamplingParams(max_tokens=3))
+    while llm.engine.requests:
+        llm.engine.step()
+    deltas = list(handle)
+    assert len(deltas) == 3
+    assert [r for _, r in deltas] == [None, None, "length"]
+    assert handle.token_ids == [t for t, _ in deltas]
+
+
+def test_max_tokens_overrides_engine_max_new(model_and_params):
+    model, params = model_and_params
+    eng = Engine(model, params, small_cfg())
+    eng.add_request(0, [1, 2, 3], max_new=9,
+                    params=SamplingParams(max_tokens=2))
+    while eng.requests:
+        eng.step()
+    assert len(eng.finished[0].generated) == 2

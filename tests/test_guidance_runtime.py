@@ -9,7 +9,7 @@ backend is checked two ways on a fixed trace:
 
 2. **Decision parity with the pre-refactor loops** — the reference functions
    below are transliterations of the seed implementations this API replaced
-   (``OnlineGDT.maybe_migrate``, ``MemSimulator._online_decide``'s
+   (the seed controller's ``maybe_migrate``, ``MemSimulator._online_decide``'s
    fragmentation arm, ``Engine._gdt_interval``).  They are pure reads of
    backend state, so at each interval the reference runs first and the
    runtime's recorded ``MigrationPlan`` must match it exactly.
@@ -17,10 +17,9 @@ backend is checked two ways on a fixed trace:
 Backends covered parametrically: ``ArenaBackend`` (trainer path),
 ``SimArenaBackend`` (simulator path, fragmented telemetry) and
 ``PagedKVBackend`` (serving path, page chunks) — plus the capacity fix at
-the ``PagedKVBackend.enforce`` boundary and the ``OnlineGDT`` shim.
+the ``PagedKVBackend.enforce`` boundary.
 """
 
-import dataclasses
 
 import pytest
 
@@ -31,7 +30,6 @@ from repro.core import (
     FractionPlacer,
     GuidanceConfig,
     GuidanceRuntime,
-    OnlineGDT,
     SiteKind,
     SiteRegistry,
     collapse_to_chunks,
@@ -62,7 +60,7 @@ def profile_of(arenas: ArenaManager) -> IntervalProfile:
 
 
 def reference_plain(arenas, hw, cap, strategy):
-    """Seed ``OnlineGDT.maybe_migrate``: profile -> recommend -> decide."""
+    """The seed controller's maybe_migrate: profile -> recommend -> decide."""
     profile = profile_of(arenas)
     recs = recommend(profile, cap, strategy)
     decision = decide(profile, recs, hw)
@@ -336,41 +334,6 @@ def test_event_stream_is_structured(harness):
     summary = guidance_summary(events)
     assert summary["intervals"] == 4
     assert summary["migrations"] == harness.runtime.migration_count
-
-
-# ========================================================== OnlineGDT shim
-def test_online_gdt_shim_matches_runtime():
-    """The deprecated alias and a hand-built runtime produce identical
-    histories on twin traces."""
-
-    def build():
-        reg = SiteRegistry()
-        mgr = ArenaManager(reg, promotion_threshold=1 * MB,
-                           fast_capacity_bytes=50 * MB)
-        a = reg.register(["a"], SiteKind.PARAM)
-        b = reg.register(["b"], SiteKind.PARAM)
-        mgr.allocate(a, 40 * MB)
-        mgr.allocate(b, 40 * MB)
-        return mgr, a, b
-
-    cfg = GuidanceConfig(strategy="thermos", fast_capacity_bytes=50 * MB,
-                         interval_steps=1)
-    m1, a1, b1 = build()
-    m2, a2, b2 = build()
-    shim = OnlineGDT(m1, CLX, cfg)
-    runtime = GuidanceRuntime(ArenaBackend(m2, CLX), CLX,
-                              dataclasses.replace(cfg))
-    for i in range(10):
-        for m, sa, sb in ((m1, a1, b1), (m2, a2, b2)):
-            m.touch(sa, 10 if i >= 5 else 300_000)
-            m.touch(sb, 300_000 if i >= 5 else 10)
-        e1 = shim.on_step()
-        e2 = runtime.on_step()
-        assert e1.decision == e2.decision
-        assert e1.bytes_moved == e2.bytes_moved
-    assert [a.fast_fraction for a in m1] == [a.fast_fraction for a in m2]
-    assert shim.side_table == runtime.side_table
-    assert isinstance(shim, GuidanceRuntime)   # it IS the runtime
 
 
 # ===================================== serving capacity fix (API boundary)

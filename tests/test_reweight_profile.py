@@ -2,7 +2,15 @@
 decay, placement tracks shifting behaviour; with the paper's default
 (no decay), accumulated history can pin a formerly-hot site forever."""
 
-from repro.core import ArenaManager, CLX, GDTConfig, OnlineGDT, SiteKind, SiteRegistry
+from repro.core import (
+    ArenaBackend,
+    ArenaManager,
+    CLX,
+    GuidanceConfig,
+    GuidanceRuntime,
+    SiteKind,
+    SiteRegistry,
+)
 
 MB = 2**20
 
@@ -17,10 +25,10 @@ def run_phase_shift(decay: float):
     b = reg.register(["phase_b"], SiteKind.OTHER)
     arena_a = mgr.allocate(a, 40 * MB)      # first-touch: A fast
     arena_b = mgr.allocate(b, 40 * MB)      # spills mostly slow
-    gdt = OnlineGDT(mgr, CLX,
-                    GDTConfig(strategy="thermos",
-                              fast_capacity_bytes=50 * MB,
-                              interval_steps=1, decay=decay))
+    gdt = GuidanceRuntime(ArenaBackend(mgr, CLX), CLX,
+                          GuidanceConfig(strategy="thermos",
+                                         fast_capacity_bytes=50 * MB,
+                                         interval_steps=1, decay=decay))
     for i in range(60):
         if i < 30:
             mgr.touch(a, 500_000)

@@ -188,15 +188,91 @@ def test_full_pool_slot_swap_never_crashes(model_and_params):
                for r in eng.finished.values())
 
 
-def test_pause_resume_of_unknown_or_finished_is_noop(model_and_params):
+# ---------------------------------------------------- lifecycle contract
+# Every edge of waiting -> active <-> paused -> finished (plus the
+# preempted detour).  Transitions outside the documented contract raise a
+# named ValueError instead of silently corrupting the wait queue.
+def test_pause_resume_on_unknown_or_finished_raises(model_and_params):
     model, params = model_and_params
     eng = Engine(model, params,
                  ServeConfig(max_batch=1, page_size=4, hbm_pages=16,
                              host_pages=32))
-    eng.pause(123)
-    eng.resume(123)
+    with pytest.raises(ValueError, match="unknown"):
+        eng.pause(123)
+    with pytest.raises(ValueError, match="unknown"):
+        eng.resume(123)
     eng.add_request(0, [1, 2, 3], max_new=1)
     while 0 in eng.requests:
         eng.step()
-    eng.resume(0)        # finished: must not resurrect or raise
+    with pytest.raises(ValueError, match="finished"):
+        eng.resume(0)    # finished: must not silently resurrect
+    with pytest.raises(ValueError, match="finished"):
+        eng.pause(0)
     assert 0 in eng.finished and 0 not in eng.requests
+
+
+def test_pause_of_waiting_or_preempted_raises(model_and_params):
+    """Pausing a request that holds no schedulable position must raise —
+    the old silent no-op left callers believing the session was parked."""
+    model, params = model_and_params
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=2, page_size=2, hbm_pages=7,
+                             host_pages=2))       # 8 logical pages total
+    prompt = [3, 1, 4, 1, 5]
+    for rid in range(4):
+        eng.add_request(rid, prompt, max_new=3)
+    waiting = [rid for rid in range(4)
+               if eng.requests[rid].state == "waiting"]
+    assert waiting, "pool cannot hold 4 requests; someone must wait"
+    with pytest.raises(ValueError, match="waiting"):
+        eng.pause(waiting[0])
+    assert eng.requests[waiting[0]].state == "waiting"
+    run_to_completion(eng)
+    assert len(eng.finished) == 4, "failed pause must not wedge the queue"
+
+
+def test_active_paused_edges_and_idempotence(model_and_params):
+    model, params = model_and_params
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=1, page_size=4, hbm_pages=16,
+                             host_pages=32))
+    eng.add_request(0, [1, 2, 3], max_new=4)
+    assert eng.requests[0].state == "active"      # admitted immediately
+    eng.resume(0)                                 # active -> no-op
+    assert eng.requests[0].state == "active"
+    eng.pause(0)                                  # active -> paused
+    assert eng.requests[0].state == "paused"
+    eng.pause(0)                                  # paused -> no-op
+    assert eng.requests[0].state == "paused"
+    assert eng.step() == {}, "paused request must not decode"
+    eng.resume(0)                                 # paused -> active
+    assert eng.requests[0].state == "active"
+    run_to_completion(eng)
+    assert eng.finished[0].finish_reason == "length"
+
+
+def test_preempted_resume_requeues_and_waiting_resume_is_noop(
+        model_and_params):
+    """The preempted detour: resume moves preempted -> waiting exactly
+    once; a second resume while still waiting is a no-op (no duplicate
+    wait-queue entry to double-admit)."""
+    model, params = model_and_params
+    eng = Engine(model, params,
+                 ServeConfig(max_batch=1, page_size=2, hbm_pages=7,
+                             host_pages=1))
+    eng.add_request(0, [3, 1, 4, 1, 5, 9], max_new=3)
+    eng.step()
+    eng.pause(0)
+    eng.add_request(1, [2, 7, 1, 8, 2, 8, 1, 8], max_new=2)
+    assert eng.requests[0].state == "preempted"
+    with pytest.raises(ValueError, match="preempted"):
+        eng.pause(0)                              # preempted can't pause
+    eng.resume(0)                                 # preempted -> waiting
+    state = eng.requests[0].state
+    assert state in ("waiting", "active")         # may admit immediately
+    queued = list(eng.wait_queue).count(0)
+    eng.resume(0)                                 # second resume: no-op
+    assert list(eng.wait_queue).count(0) == queued, \
+        "double resume must not duplicate the wait-queue entry"
+    run_to_completion(eng)
+    assert sorted(eng.finished) == [0, 1]

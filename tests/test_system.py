@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke
-from repro.core import CLX, GDTConfig
+from repro.core import CLX, GuidanceConfig
 from repro.data import SyntheticLM
 from repro.mem import MemorySimulator
 from repro.mem.workloads import lulesh
@@ -58,7 +58,7 @@ def test_training_with_guidance_is_lossless_and_offloads():
     runs = {}
     for name, gdt in (
         ("plain", None),
-        ("guided", GDTConfig(enabled=True,
+        ("guided", GuidanceConfig(enabled=True,
                              fast_capacity_bytes=int(state_bytes * 0.6),
                              interval_steps=4, promotion_threshold=1024)),
     ):

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke
-from repro.core import GDTConfig
+from repro.core import GuidanceConfig
 from repro.core.placement import memory_kind_of
 from repro.data import SyntheticLM
 from repro.models import build_model
@@ -109,7 +109,7 @@ def test_gdt_offload_preserves_numerics_and_migrates():
     state_bytes += sum(
         a.size * a.dtype.itemsize
         for a in jax.tree.leaves(tr_plain.opt_state.m)) * 2
-    gdt = GDTConfig(enabled=True, strategy="thermos",
+    gdt = GuidanceConfig(enabled=True, strategy="thermos",
                     fast_capacity_bytes=int(state_bytes * 0.6),
                     interval_steps=5, promotion_threshold=1024)
     tr_gdt = Trainer(model, opt,
