@@ -1,12 +1,18 @@
 """Shared benchmark plumbing: every bench module exposes ``run() -> rows``
 where each row is ``(name, us_per_call, derived)``; ``derived`` is the
 figure-of-merit the corresponding paper table/figure reports (usually a
-speedup ratio).  ``benchmarks.run`` aggregates all modules into one CSV."""
+speedup ratio).  ``benchmarks.run`` aggregates all modules into one CSV and
+(on ``--smoke``) persists each group's rows as ``BENCH_<group>.json`` so the
+perf trend is tracked across PRs instead of evaporating with the CI log."""
 
 from __future__ import annotations
 
+import datetime
+import json
+import os
+import subprocess
 import time
-from typing import Callable, Iterable, List, Tuple
+from typing import Callable, Iterable, List, Optional, Tuple
 
 Row = Tuple[str, float, float]
 
@@ -22,3 +28,33 @@ def emit(rows: Iterable[Row]) -> List[Row]:
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived:.4f}")
     return rows
+
+
+def git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__)))).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def write_bench_json(group: str, rows: Iterable[Row],
+                     out_dir: Optional[str] = None) -> str:
+    """Persist one benchmark group's trajectory as ``BENCH_<group>.json``:
+    the rows plus the git revision and a UTC timestamp, so a checked-out
+    artifact pins exactly which tree produced which numbers."""
+    path = os.path.join(out_dir or os.getcwd(), f"BENCH_{group}.json")
+    payload = {
+        "group": group,
+        "git_rev": git_rev(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
+        "rows": [{"name": name, "us_per_call": us, "derived": derived}
+                 for name, us, derived in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    return path

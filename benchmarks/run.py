@@ -41,7 +41,9 @@ def main() -> None:
                         help="reduced sweeps for CI")
     parser.add_argument("--smoke", action="store_true",
                         help="CI smoke: quick mode over one bench per "
-                             "guidance backend")
+                             "guidance backend; persists each group's rows "
+                             "as BENCH_<group>.json (rows + git rev + "
+                             "timestamp)")
     args = parser.parse_args()
 
     if args.smoke:
@@ -64,10 +66,21 @@ def main() -> None:
             print(f"# skip {name}: module {modname} not present", file=sys.stderr)
             continue
         try:
-            mod.run(quick=args.quick)
+            rows = mod.run(quick=args.quick)
         except Exception:
             traceback.print_exc()
             failures.append(name)
+            continue
+        if args.smoke and rows:
+            # Persist the trajectory under the module's short name
+            # (bench_serving -> BENCH_serving.json) — rows + git rev +
+            # timestamp, uploaded as a CI artifact.
+            from .common import write_bench_json
+            short = modname.rsplit(".", 1)[-1]
+            short = short[len("bench_"):] if short.startswith("bench_") \
+                else short
+            path = write_bench_json(short, rows)
+            print(f"# wrote {path}", file=sys.stderr)
     if failures:
         sys.exit(f"benchmark groups failed: {failures}")
 

@@ -69,15 +69,20 @@ def serving_summary(engine) -> Dict[str, float]:
 
     Engine-side scalars are prefixed ``engine_`` (swap and transfer probes,
     prefill dispatch/token counts, admission/preemption/starvation totals,
-    and the per-``finish_reason`` counts ``engine_finished_stop`` /
+    prefix-cache hit/saved-token counters when the cache is enabled, and
+    the per-``finish_reason`` counts ``engine_finished_stop`` /
     ``engine_finished_length`` / ``engine_finished_truncated``); guidance
-    scalars keep the ``guidance_summary`` names.  Benchmarks and reports
-    read serving telemetry through this function rather than poking at
-    per-subsystem counters.
+    scalars keep the ``guidance_summary`` names — the per-request KV
+    controller's unprefixed, the shared-prefix controller's under
+    ``prefix_``.  Benchmarks and reports read serving telemetry through
+    this function rather than poking at per-subsystem counters.
     """
     out = {f"engine_{k}": float(v) for k, v in engine.stats().items()}
     if getattr(engine, "runtime", None) is not None:
         out.update(guidance_summary(engine.runtime.events))
+    if getattr(engine, "prefix_runtime", None) is not None:
+        out.update({f"prefix_{k}": v for k, v in
+                    guidance_summary(engine.prefix_runtime.events).items()})
     return out
 
 

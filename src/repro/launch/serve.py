@@ -44,6 +44,13 @@ def main():
     p.add_argument("--top-k", type=int, default=0)
     p.add_argument("--top-p", type=float, default=1.0)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="enable the cross-request radix prefix cache")
+    p.add_argument("--min-prefix-pages", type=int, default=1,
+                   help="pages a prefix must span to enter the cache")
+    p.add_argument("--shared-prefix-len", type=int, default=0,
+                   help="give every session this many identical leading "
+                        "prompt tokens (a synthetic shared system prompt)")
     args = p.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
@@ -55,12 +62,17 @@ def main():
     llm = LLM(model, params, ServeConfig(
         max_batch=args.max_batch, page_size=args.page_size,
         hbm_pages=args.hbm_pages, host_pages=args.host_pages,
-        policy=args.policy))
+        policy=args.policy, enable_prefix_cache=args.prefix_cache,
+        min_prefix_pages=args.min_prefix_pages))
 
     rng = np.random.default_rng(0)
+    shared = [int(t) for t in
+              rng.integers(1, cfg.vocab, args.shared_prefix_len)]
     handles = {}
     for rid in range(args.sessions):
-        prompt = [int(t) for t in rng.integers(1, cfg.vocab, args.prompt_len)]
+        tail_len = max(args.prompt_len - args.shared_prefix_len, 1)
+        prompt = shared + [int(t)
+                           for t in rng.integers(1, cfg.vocab, tail_len)]
         handles[rid] = llm.submit(prompt, SamplingParams(
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p, seed=args.seed + rid,

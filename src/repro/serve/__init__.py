@@ -7,6 +7,7 @@ from .eviction import (
     register_eviction_policy,
 )
 from .kvcache import Page, PagedKVPool
+from .prefix_cache import PrefixBackend, PrefixCache, PrefixNode, block_hash
 from .sampling import SamplingParams
 
 __all__ = [
@@ -18,11 +19,15 @@ __all__ = [
     "Page",
     "PagedKVBackend",
     "PagedKVPool",
+    "PrefixBackend",
+    "PrefixCache",
+    "PrefixNode",
     "Request",
     "RequestHandle",
     "RequestOutput",
     "SamplingParams",
     "ServeConfig",
+    "block_hash",
     "make_eviction_policy",
     "register_eviction_policy",
 ]

@@ -17,7 +17,14 @@ chunks.  The request lifecycle is explicit:
   prompt's K/V directly into page-table slots and attends with per-token
   causal lengths (``kernels.ops.paged_prefill``).  The chunked path
   (``prefill="chunked"``: step the prompt through decode one token at a
-  time) survives as the bitwise-equality oracle.
+  time) survives as the bitwise-equality oracle.  With
+  ``enable_prefix_cache`` the cross-request radix prefix cache
+  (serve/prefix_cache.py) is consulted FIRST: matched full-page blocks are
+  attached by reference (refcounted, copy-on-write) and the dispatch runs
+  only over the uncovered suffix at its absolute positions — a full hit
+  skips prefill entirely — with cached-vs-uncached logits bitwise-equal
+  (K/V depend only on tokens and positions, and suffix == whole-prompt
+  prefill by the one-shot == chunked == decode equality).
 * **Scheduling** each step packs up to ``max_batch`` active requests by
   last-scheduled age under two budgets — usable HBM slots and free logical
   pages — so a batch can always be made resident without evicting its own
@@ -74,6 +81,7 @@ from ..models.moe import moe_decode
 from ..models.transformer import Model
 from .eviction import make_eviction_policy
 from .kvcache import PagedKVPool
+from .prefix_cache import PrefixBackend, PrefixCache
 from .sampling import DEFAULT_MAX_TOKENS, SamplingParams
 
 F32 = jnp.float32
@@ -97,6 +105,15 @@ class ServeConfig:
     # Prompt ingestion: "one_shot" = single jitted dispatch per prompt;
     # "chunked" = step prompt tokens through decode (the bitwise oracle).
     prefill: str = "one_shot"
+    # Cross-request radix prefix cache (serve/prefix_cache.py): requests
+    # whose prompts start with the same full-page token blocks share those
+    # pages by reference and prefill only the uncovered suffix.  Off by
+    # default: sharing changes page-lifetime accounting (cached pages
+    # outlive their requests), so workloads opt in.
+    enable_prefix_cache: bool = False
+    # A prefix enters the cache only when it spans at least this many FULL
+    # pages — gates tree churn from trivially short shared prefixes.
+    min_prefix_pages: int = 1
     # Debug: copy every scheduled row's logits to host into
     # ``engine.last_logits`` (a full (B, vocab) transfer per step — keep
     # off on the decode hot path; the parity tests turn it on).
@@ -152,7 +169,11 @@ class PagedKVBackend:
         page_bytes = self.pool.page_bytes
         step = self.clock()
         for rid in self.requests:
-            pages = self.pool.request_pages(rid)
+            # Shared prefix pages are the PrefixBackend's tier objects —
+            # profiling them per-request would double-govern one page under
+            # two controllers (and double-count its accesses).
+            pages = [p for p in self.pool.request_pages(rid)
+                     if not p.shared]
             if not pages:
                 continue
             fast_pages = sum(1 for p in pages if p.hbm_slot is not None)
@@ -176,9 +197,10 @@ class PagedKVBackend:
     def reweight(self, decay: float) -> None:
         # Float counters: int(1 * 0.5) would zero any page with a single
         # access per interval, erasing the recency ordering decay exists to
-        # preserve.
+        # preserve.  Shared pages decay under the PrefixBackend instead.
         for p in self.pool.pages.values():
-            p.accesses = p.accesses * decay
+            if not p.shared:
+                p.accesses = p.accesses * decay
 
     def on_plan(self, plan: MigrationPlan) -> None:
         # Track the plan every interval (even when the break-even rule says
@@ -251,6 +273,16 @@ class Engine:
         # Reserve one HBM slot as the write target for inactive batch rows,
         # so the batched scatter never collides with a real page.
         self.scratch_slot = self.pool.free_hbm.pop(0)
+        # Cross-request prefix sharing: the radix cache itself, plus (under
+        # the guided policy) a SECOND GuidanceRuntime whose tier objects are
+        # the shared prefixes — per-interval hit counts as the access
+        # profile, ski-rental promote/demote, batched-exchange enforcement.
+        self.prefix_cache: Optional[PrefixCache] = None
+        self.prefix_backend: Optional[PrefixBackend] = None
+        self.prefix_runtime: Optional[GuidanceRuntime] = None
+        if cfg.enable_prefix_cache:
+            self.prefix_cache = PrefixCache(
+                self.pool, cfg.page_size, min_pages=cfg.min_prefix_pages)
         self.kv_backend: Optional[PagedKVBackend] = None
         self.runtime: Optional[GuidanceRuntime] = None
         if cfg.policy == "gdt":
@@ -267,6 +299,20 @@ class Engine:
                     num_fragments=cfg.num_fragments,
                     skip_empty_intervals=True),
                 clock=lambda: self.step_count)
+            if self.prefix_cache is not None:
+                self.prefix_backend = PrefixBackend(
+                    self.prefix_cache, clock=lambda: self.step_count)
+                self.prefix_runtime = GuidanceRuntime(
+                    self.prefix_backend, hw,
+                    GuidanceConfig(
+                        strategy=cfg.strategy,
+                        fast_capacity_bytes=(cfg.hbm_pages - 1)
+                        * self.pool.page_bytes,
+                        interval_steps=cfg.interval_steps,
+                        decay=cfg.access_decay,
+                        num_fragments=cfg.num_fragments,
+                        skip_empty_intervals=True),
+                    clock=lambda: self.step_count)
         self._decode_greedy = jax.jit(self._build_decode(with_sampler=False))
         self._decode_sampled = jax.jit(self._build_decode(with_sampler=True))
         self._prefill = jax.jit(self._build_prefill())
@@ -279,6 +325,7 @@ class Engine:
         self.preemptions = 0           # paused requests evicted wholesale
         self.starved_steps = 0         # request-steps skipped for capacity
         self.truncations = 0           # requests finished early for capacity
+        self.saved_prefill_tokens = 0  # prompt tokens served from the cache
         # Per-finish_reason totals (monotonic — surviving pop_finished
         # drains), reported through stats() and serving_summary.
         self.finish_counts: Dict[str, int] = {
@@ -293,7 +340,15 @@ class Engine:
 
     @property
     def last_recs(self) -> Dict[int, bool]:
-        return self.kv_backend.last_recs if self.kv_backend is not None else {}
+        """Latest planned placement across BOTH controllers (per-request KV
+        pages and shared prefixes) — what guided eviction consults.  Page
+        ids are globally unique, so the merge cannot collide."""
+        recs: Dict[int, bool] = {}
+        if self.kv_backend is not None:
+            recs.update(self.kv_backend.last_recs)
+        if self.prefix_backend is not None:
+            recs.update(self.prefix_backend.last_recs)
+        return recs
 
     @property
     def usable_hbm_pages(self) -> int:
@@ -413,13 +468,19 @@ class Engine:
         from ..kernels.ops import paged_prefill
 
         def prefill(params, k_pool, v_pool, tokens, page_table, slots, offs,
-                    n_real):
-            """tokens: (S,) padded prompt; page_table: (MP,) the request's
-            pages; slots/offs: (S,) physical write target per token (the
-            scratch slot for padded rows); n_real: () int32 live prefix."""
+                    n_real, start):
+            """tokens: (S,) padded suffix; page_table: (MP,) the request's
+            pages (cache-covered prefix included); slots/offs: (S,) physical
+            write target per token (the scratch slot for padded rows);
+            n_real: () int32 live rows; start: () int32 absolute position of
+            row 0 (0 for an uncached prompt, the covered token count after a
+            prefix-cache hit — traced, so hits never recompile).  Rows
+            attend by ABSOLUTE length over the page table, so a suffix-only
+            dispatch replays the whole-prompt computation bitwise."""
             S = tokens.shape[0]
-            positions = jnp.arange(S, dtype=jnp.int32)
-            valid = positions < n_real
+            local = jnp.arange(S, dtype=jnp.int32)
+            positions = start + local
+            valid = local < n_real
             lengths = jnp.where(valid, positions + 1, 0)
             x = jnp.take(params["embed"]["tok"], tokens[None], axis=0)
 
@@ -561,6 +622,13 @@ class Engine:
             # real lifetime need), so an admitted request can always decode
             # at least a page's worth before capacity pressure returns.
             if min(n_pages + 1, pages_total) > self.free_logical_pages():
+                # Cold cached prefixes yield their logical pages before any
+                # live request is preempted.
+                shortfall = (min(n_pages + 1, pages_total)
+                             - self.free_logical_pages())
+                if (self.prefix_cache is not None
+                        and self.prefix_cache.reclaim(shortfall)):
+                    continue
                 if not self._preempt_one():
                     return                      # head waits; FIFO order
                 continue
@@ -586,11 +654,12 @@ class Engine:
         return True
 
     def _release_pages(self, request_id: int):
-        page_ids = [p.page_id for p in self.pool.request_pages(request_id)]
-        for pid in page_ids:
-            self.pool.free(pid)
+        """Drop every page reference the request holds.  Shared prefix
+        pages survive on the cache's reference; only pages that actually
+        died leave the eviction policy's recommendation view."""
+        freed = self.pool.release_request(request_id)
         if self.kv_backend is not None:
-            self.kv_backend.forget_pages(page_ids)
+            self.kv_backend.forget_pages(freed)
 
     def _reclaim_logical_pages(self):
         """Nothing schedulable while active requests exist — logical pages
@@ -598,6 +667,8 @@ class Engine:
         else the youngest active page-holder (it re-enters the wait queue
         and recomputes later).  A request that is alone against the whole
         pool can never grow or finish: truncate it."""
+        if self.prefix_cache is not None and self.prefix_cache.reclaim(1):
+            return
         if self._preempt_one():
             return
         active = sorted((r for r in self.requests.values()
@@ -618,51 +689,113 @@ class Engine:
         self.preemptions += 1
 
     # -------------------------------------------------------- prefill
+    def _match_prefix(self, req: Request, context: List[int],
+                      n_ingest: int) -> list:
+        """Consult the prefix cache and attach every matched full-page
+        block to the request by reference.  Returns the matched node chain
+        (empty without a cache or on a miss).  Matched pages are made
+        HBM-resident HERE: the suffix dispatch (or first decode step, on a
+        full hit) attends over them."""
+        if self.prefix_cache is None:
+            return []
+        chain = self.prefix_cache.match(context[:n_ingest], self.step_count)
+        if not chain:
+            return []
+        hit_ids = [n.page_id for n in chain]
+        missing = [pid for pid in hit_ids
+                   if self.pool.pages[pid].hbm_slot is None]
+        if missing:
+            self._ensure_free_hbm(len(missing), needed=hit_ids)
+            self.pool.swap_in_many(missing)
+            self.swap_in_events += len(missing)
+            # A hit on a demoted prefix is a rental payment against the
+            # PREFIX controller's ledger (it made the demotion call).
+            if self.prefix_runtime is not None:
+                self.prefix_runtime.record_rental(
+                    self.pool.page_bytes * len(missing),
+                    source="prefix_hit")
+        for node in chain:
+            self.pool.attach(req.request_id, node.page_id, self.step_count)
+        self.saved_prefill_tokens += len(chain) * self.cfg.page_size
+        return chain
+
+    def _insert_prefix(self, req: Request, context: List[int],
+                       n_ingest: int, chain: list) -> None:
+        """Adopt the request's freshly written full-page PROMPT blocks into
+        the cache (generated tokens never extend a shareable prefix — the
+        reuse signal is the shared system prompt, and K/V content is
+        token-determined either way).  ``chain`` is what ``_match_prefix``
+        already covered; insertion continues the radix walk from there."""
+        if self.prefix_cache is None:
+            return
+        self.prefix_cache.insert(
+            context[:n_ingest], self.pool.request_pages(req.request_id),
+            limit=min(n_ingest, len(req.tokens)), step=self.step_count,
+            chain=chain)
+
     def _prefill_request(self, req: Request):
         """Ingest ``req.context[:-1]`` (the last token is fed by the first
-        decode step).  One jitted dispatch in one_shot mode; the chunked
-        oracle steps tokens through decode."""
+        decode step).  The prefix cache is consulted first: matched blocks
+        attach by reference and only the uncovered suffix is ingested — one
+        jitted dispatch in one_shot mode (a FULL hit dispatches nothing);
+        the chunked oracle steps suffix tokens through decode."""
         context = req.context
         n_ingest = len(context) - 1
         if n_ingest == 0:
             req.pos = 0
             return
-        if self.cfg.prefill == "chunked":
-            for t in context[:-1]:
-                self._decode_one(req, t)
-            self.prefill_tokens += n_ingest
-            return
         P = self.cfg.page_size
-        MP = self.cfg.max_pages_per_seq
         rid = req.request_id
-        n_pages = -(-n_ingest // P)
-        self._ensure_free_hbm(n_pages, needed=[])
-        pages = [self.pool.allocate(rid, idx, self.step_count)
+        chain = self._match_prefix(req, context, n_ingest)
+        covered = len(chain) * P
+        n_suffix = n_ingest - covered
+        if n_suffix == 0:
+            # Full hit: every ingested token is already in shared pages.
+            req.pos = n_ingest
+            return
+        if self.cfg.prefill == "chunked":
+            req.pos = covered
+            for t in context[covered:-1]:
+                self._decode_one(req, t)
+            self.prefill_tokens += n_suffix
+            self._insert_prefix(req, context, n_ingest, chain)
+            return
+        MP = self.cfg.max_pages_per_seq
+        n_prefix_pages = covered // P
+        n_pages = -(-n_ingest // P) - n_prefix_pages
+        self._ensure_free_hbm(
+            n_pages, needed=[p.page_id
+                             for p in self.pool.request_pages(rid)])
+        pages = [self.pool.allocate(rid, n_prefix_pages + idx,
+                                    self.step_count)
                  for idx in range(n_pages)]
         # Pad the token axis to a power-of-two bucket (>= one page) so jit
-        # compiles per bucket, not per prompt length.
-        S = max(P, 1 << (n_ingest - 1).bit_length())
+        # compiles per bucket, not per suffix length.
+        S = max(P, 1 << (n_suffix - 1).bit_length())
         tokens = np.zeros((S,), np.int32)
-        tokens[:n_ingest] = context[:-1]
+        tokens[:n_suffix] = context[covered:n_ingest]
         slots = np.full((S,), self.scratch_slot, np.int32)
         offs = np.zeros((S,), np.int32)
-        for t in range(n_ingest):
+        # ``covered`` is page-aligned, so suffix token t lands at page t//P
+        # offset t%P of the private tail.
+        for t in range(n_suffix):
             slots[t] = pages[t // P].hbm_slot
             offs[t] = t % P
         table = np.full((MP,), -1, np.int32)
-        for p in pages:
+        for p in self.pool.request_pages(rid):
             table[p.index_in_seq] = p.hbm_slot
         nk, nv = self._prefill(
             self.params, self.pool.k_hbm, self.pool.v_hbm,
             jnp.asarray(tokens), jnp.asarray(table), jnp.asarray(slots),
-            jnp.asarray(offs), jnp.int32(n_ingest))
+            jnp.asarray(offs), jnp.int32(n_suffix), jnp.int32(covered))
         self.pool.k_hbm, self.pool.v_hbm = nk, nv
         req.pos = n_ingest
         for i, p in enumerate(pages):
             p.accesses += 1         # the dispatch's access set: every page
-            p.tokens_used = min(P, n_ingest - i * P)
+            p.tokens_used = min(P, n_suffix - i * P)
         self.prefill_dispatches += 1
-        self.prefill_tokens += n_ingest
+        self.prefill_tokens += n_suffix
+        self._insert_prefix(req, context, n_ingest, chain)
 
     # ------------------------------------------------------- page mgmt
     def _note_swap_in(self, n_pages: int):
@@ -675,9 +808,17 @@ class Engine:
 
     def _page_for_write(self, req: Request) -> Tuple[int, int]:
         """(hbm_slot, offset) for the next token.  The batch-prepare pass
-        has already made every page resident and allocated the write page."""
+        has already made every page resident and allocated the write page.
+        Copy-on-write guard: sharing is full-page granular, so the write
+        target is never shared on the normal path (a request's first
+        private token lands past the covered prefix on a fresh page) — but
+        if a shared page IS the target, the request gets a private copy
+        rather than corrupting every other holder's KV."""
         idx, off = divmod(req.pos, self.cfg.page_size)
         page = self.pool.request_pages(req.request_id)[idx]
+        if page.refcount > 1 or page.shared:
+            page = self.pool.copy_page(page.page_id, req.request_id,
+                                       self.step_count)
         page.tokens_used = off + 1
         return page.hbm_slot, off
 
@@ -786,6 +927,8 @@ class Engine:
                     self._finish(r, reason="length")
         if self.runtime is not None:
             self.runtime.on_step()        # MaybeMigrate at the interval
+        if self.prefix_runtime is not None:
+            self.prefix_runtime.on_step()  # shared prefixes: same loop
         return out
 
     def _finish(self, req: Request, reason: str = "length"):
@@ -874,7 +1017,19 @@ class Engine:
 
     # --------------------------------------------------------- telemetry
     def stats(self) -> Dict[str, float]:
+        pc = self.prefix_cache
+        prefix = {
+            "prefix_lookups": pc.lookups,
+            "prefix_hit_requests": pc.hit_requests,
+            "prefix_hit_pages": pc.hit_pages,
+            "prefix_hit_rate": pc.hit_rate,
+            "prefix_cached_pages": len(pc),
+            "prefix_inserted_pages": pc.inserted_pages,
+            "prefix_evicted_pages": pc.evicted_pages,
+        } if pc is not None else {}
         return {
+            **prefix,
+            "saved_prefill_tokens": self.saved_prefill_tokens,
             "steps": self.step_count,
             "swap_ins": self.pool.swaps_in,
             "swap_outs": self.pool.swaps_out,

@@ -45,17 +45,26 @@ class EvictionPolicy:
 
 
 class LRUEviction(EvictionPolicy):
-    """Evict the page of the least-recently-scheduled request."""
+    """Evict the page of the least-recently-scheduled request.
+
+    Refcount-aware: a page's recency is the MOST recent of its holders'
+    last-scheduled steps (a shared prefix page is as hot as its hottest
+    request), and a page whose only holder is the prefix cache falls back
+    to the page's own ``last_used`` clock (its last hit/attach)."""
 
     name = "lru"
 
     def pick(self, candidates: List[Page], engine) -> Optional[int]:
         if not candidates:
             return None
-        return min(
-            candidates,
-            key=lambda p: engine.requests[p.request_id].last_scheduled,
-        ).page_id
+
+        def recency(p: Page) -> int:
+            stamps = [engine.requests[rid].last_scheduled
+                      for rid in engine.pool.holders(p.page_id)
+                      if rid in engine.requests]
+            return max(stamps) if stamps else p.last_used
+
+        return min(candidates, key=recency).page_id
 
 
 class FIFOEviction(EvictionPolicy):

@@ -19,6 +19,17 @@ direction of a ``MigrationPlan`` as one gather + one staged transfer + one
 scatter per pool array, so enforcing an N-page plan costs a constant number
 of host<->device transfers (``transfer_events`` is the probe) while the
 per-page swap/byte counters stay exact.
+
+Pages are REFCOUNTED, not single-owner: the cross-request prefix cache
+(serve/prefix_cache.py) shares one physical page between every request whose
+prompt starts with the same token blocks, plus one reference held by the
+cache itself.  ``Page.request_id`` is provenance only (the allocator);
+authoritative request->pages association lives in the pool's per-request
+sequence table (``request_pages``/``attach``/``release_request``), and
+``free`` is a refcount decrement that releases physical slots only at zero.
+Shared pages are immutable (copy-on-write: ``copy_page`` gives a writer a
+private copy) — sharing is full-page granular, so the serving engine never
+writes into a page with refcount > 1 on the normal path.
 """
 
 from __future__ import annotations
@@ -37,7 +48,8 @@ DEVICE_KIND = "device"
 @dataclasses.dataclass
 class Page:
     page_id: int                 # global logical id
-    request_id: int
+    request_id: int              # ALLOCATOR provenance, not ownership: the
+    #                              pool's sequence table is authoritative
     index_in_seq: int            # page number within the sequence
     birth_step: int
     hbm_slot: Optional[int]      # slot in HBM pool, None if on host
@@ -47,6 +59,16 @@ class Page:
     # signal decay is meant to preserve.
     accesses: float = 0.0
     tokens_used: int = 0
+    # Lifecycle: one reference per attached request plus one for the prefix
+    # cache when the page is a shared-prefix block.  ``free`` decrements;
+    # physical slots release only at zero.
+    refcount: int = 1
+    # True once the prefix cache holds a reference — such pages are profiled
+    # and tier-placed by the PrefixBackend, not the per-request KV backend.
+    shared: bool = False
+    # Step of the last attach/access — the eviction fallback clock for pages
+    # whose only holder is the cache (no live request to LRU against).
+    last_used: int = 0
 
 
 class PagedKVPool:
@@ -75,9 +97,14 @@ class PagedKVPool:
         self.k_host = jax.device_put(pool(host_pages), self._host_sharding)
         self.v_host = jax.device_put(pool(host_pages), self._host_sharding)
 
+        self.hbm_pages = hbm_pages
+        self.host_pages = host_pages
         self.free_hbm: List[int] = list(range(hbm_pages))
         self.free_host: List[int] = list(range(host_pages))
         self.pages: Dict[int, Page] = {}
+        # request_id -> ordered page list (the authoritative association;
+        # a shared page appears in every attached request's list).
+        self._seq: Dict[int, List[Page]] = {}
         self._next_id = 0
         self.swaps_in = 0
         self.swaps_out = 0
@@ -99,21 +126,114 @@ class PagedKVPool:
     def allocate(self, request_id: int, index_in_seq: int,
                  step: int) -> Page:
         if not self.free_hbm:
-            raise MemoryError("HBM pool exhausted; evict first")
+            raise MemoryError(
+                f"HBM pool exhausted: all {self.hbm_pages} pages "
+                f"(ServeConfig.hbm_pages) hold live or cached KV; evict or "
+                f"free pages first, or raise ServeConfig.hbm_pages")
         slot = self.free_hbm.pop()
         page = Page(page_id=self._next_id, request_id=request_id,
                     index_in_seq=index_in_seq, birth_step=step,
-                    hbm_slot=slot, host_slot=None)
+                    hbm_slot=slot, host_slot=None, last_used=step)
         self._next_id += 1
         self.pages[page.page_id] = page
+        self._seq.setdefault(request_id, []).append(page)
         return page
 
     def free(self, page_id: int):
-        page = self.pages.pop(page_id)
+        """Drop ONE reference; physical slots release only at refcount zero.
+        Unknown or already-freed ids raise a named error — a double free
+        under sharing would hand the same physical slot to two sequences."""
+        page = self.pages.get(page_id)
+        if page is None:
+            raise ValueError(
+                f"cannot free page {page_id}: unknown or already-freed id "
+                f"(a page dies when its refcount reaches zero — freeing it "
+                f"again, or freeing an id this pool never allocated, is a "
+                f"lifecycle bug in the caller)")
+        page.refcount -= 1
+        if page.refcount > 0:
+            return
+        self.pages.pop(page_id)
         if page.hbm_slot is not None:
             self.free_hbm.append(page.hbm_slot)
         if page.host_slot is not None:
             self.free_host.append(page.host_slot)
+
+    # ----------------------------------------------------------- sharing
+    def acquire(self, page_id: int, shared: bool = False) -> Page:
+        """Add one bare reference (the prefix cache's hold on a block).
+        ``shared=True`` marks the page as cache-governed for profiling."""
+        page = self.pages[page_id]
+        page.refcount += 1
+        if shared:
+            page.shared = True
+        return page
+
+    def attach(self, request_id: int, page_id: int, step: int) -> Page:
+        """Reference an existing (shared) page from ``request_id``'s
+        sequence.  Pages attach in index order — prefix sharing is only
+        legal over a sequence's leading full pages."""
+        page = self.pages[page_id]
+        seq = self._seq.setdefault(request_id, [])
+        if len(seq) != page.index_in_seq:
+            raise ValueError(
+                f"cannot attach page {page_id} (index_in_seq="
+                f"{page.index_in_seq}) to request {request_id} holding "
+                f"{len(seq)} pages: prefix pages attach in order")
+        page.refcount += 1
+        page.last_used = step
+        seq.append(page)
+        return page
+
+    def release_request(self, request_id: int) -> List[int]:
+        """Drop every reference ``request_id`` holds.  Returns the ids of
+        pages that actually died (shared pages survive on the cache's
+        reference)."""
+        freed: List[int] = []
+        for page in self._seq.pop(request_id, []):
+            self.free(page.page_id)
+            if page.page_id not in self.pages:
+                freed.append(page.page_id)
+        return freed
+
+    def holders(self, page_id: int) -> List[int]:
+        """Request ids currently referencing a page (provenance-free)."""
+        return [rid for rid, seq in self._seq.items()
+                if any(p.page_id == page_id for p in seq)]
+
+    def copy_page(self, page_id: int, request_id: int, step: int) -> Page:
+        """Copy-on-write: give ``request_id`` a private HBM copy of a shared
+        page, swapping it into the request's sequence in place.  The source
+        must be HBM-resident (writers only ever target resident pages)."""
+        src = self.pages[page_id]
+        if src.hbm_slot is None:
+            raise ValueError(
+                f"cannot copy-on-write page {page_id}: not HBM-resident "
+                f"(swap it in first)")
+        if not self.free_hbm:
+            raise MemoryError(
+                f"HBM pool exhausted: all {self.hbm_pages} pages "
+                f"(ServeConfig.hbm_pages) hold live or cached KV; evict or "
+                f"free pages first, or raise ServeConfig.hbm_pages")
+        seq = self._seq.get(request_id, [])
+        at = next((i for i, p in enumerate(seq) if p.page_id == page_id),
+                  None)
+        if at is None:
+            raise ValueError(
+                f"cannot copy-on-write page {page_id}: request "
+                f"{request_id} does not reference it")
+        slot = self.free_hbm.pop()
+        new = Page(page_id=self._next_id, request_id=request_id,
+                   index_in_seq=src.index_in_seq, birth_step=step,
+                   hbm_slot=slot, host_slot=None, accesses=src.accesses,
+                   tokens_used=src.tokens_used, last_used=step)
+        self._next_id += 1
+        self.pages[new.page_id] = new
+        self.k_hbm = self.k_hbm.at[:, slot].set(self.k_hbm[:, src.hbm_slot])
+        self.v_hbm = self.v_hbm.at[:, slot].set(self.v_hbm[:, src.hbm_slot])
+        seq[at] = new
+        self.free(page_id)               # drop the request's old reference
+        return new
 
     # ------------------------------------------------------- migrations
     def _gather(self, src_k, src_v, src_idx):
@@ -152,9 +272,9 @@ class PagedKVPool:
 
     def swap_out_many(self, page_ids: Sequence[int]):
         """HBM -> host, one batched transfer for the whole id list.
-        Already-slow and unknown ids are skipped; counters stay per-page
-        exact (one swap + page_bytes per page actually moved)."""
-        ids = [pid for pid in page_ids
+        Already-slow, unknown and duplicate ids are skipped; counters stay
+        per-page exact (one swap + page_bytes per page actually moved)."""
+        ids = [pid for pid in dict.fromkeys(page_ids)
                if pid in self.pages and self.pages[pid].hbm_slot is not None]
         if not ids:
             return
@@ -173,13 +293,18 @@ class PagedKVPool:
         self.bytes_moved += self.page_bytes * len(ids)
 
     def swap_in_many(self, page_ids: Sequence[int]):
-        """host -> HBM, one batched transfer for the whole id list."""
-        ids = [pid for pid in page_ids
+        """host -> HBM, one batched transfer for the whole id list (unknown,
+        already-fast and duplicate ids are skipped)."""
+        ids = [pid for pid in dict.fromkeys(page_ids)
                if pid in self.pages and self.pages[pid].hbm_slot is None]
         if not ids:
             return
         if len(self.free_hbm) < len(ids):
-            raise MemoryError("HBM pool exhausted; evict first")
+            raise MemoryError(
+                f"HBM pool exhausted: {len(ids)} pages to swap in but only "
+                f"{len(self.free_hbm)} of {self.hbm_pages} slots "
+                f"(ServeConfig.hbm_pages) are free; evict first or raise "
+                f"ServeConfig.hbm_pages")
         src = [self.pages[pid].host_slot for pid in ids]
         dst = [self.free_hbm.pop() for _ in ids]
         self.k_hbm, self.v_hbm = self._move_pages(
@@ -204,16 +329,24 @@ class PagedKVPool:
         guarantees both).  Still one gather + one staged transfer + one
         scatter per pool array per direction.
         """
-        outs = [pid for pid in out_ids
+        outs = [pid for pid in dict.fromkeys(out_ids)
                 if pid in self.pages and self.pages[pid].hbm_slot is not None]
-        ins = [pid for pid in in_ids
+        ins = [pid for pid in dict.fromkeys(in_ids)
                if pid in self.pages and self.pages[pid].hbm_slot is None]
         if not outs and not ins:
             return
         if len(outs) > len(ins) + len(self.free_host):
-            raise MemoryError("host pool exhausted")
+            raise MemoryError(
+                f"host pool exhausted: {len(outs)} demotions need more than "
+                f"the {len(self.free_host)} free of {self.host_pages} host "
+                f"slots (ServeConfig.host_pages) plus {len(ins)} freed by "
+                f"promotions; raise ServeConfig.host_pages")
         if len(ins) > len(outs) + len(self.free_hbm):
-            raise MemoryError("HBM pool exhausted; evict first")
+            raise MemoryError(
+                f"HBM pool exhausted: {len(ins)} promotions need more than "
+                f"the {len(self.free_hbm)} free of {self.hbm_pages} HBM "
+                f"slots (ServeConfig.hbm_pages) plus {len(outs)} freed by "
+                f"demotions; evict first or raise ServeConfig.hbm_pages")
         out_src = [self.pages[pid].hbm_slot for pid in outs]
         in_src = [self.pages[pid].host_slot for pid in ins]
         # Stage BOTH directions before any scatter: a destination slot may
@@ -258,6 +391,8 @@ class PagedKVPool:
         return sum(1 for p in self.pages.values() if p.hbm_slot is not None)
 
     def request_pages(self, request_id: int) -> List[Page]:
-        return sorted(
-            (p for p in self.pages.values() if p.request_id == request_id),
-            key=lambda p: p.index_in_seq)
+        """The request's ordered page list (shared prefix pages included) —
+        read from the sequence table, NOT by scanning ``Page.request_id``:
+        a shared page's allocator may be long finished."""
+        return sorted(self._seq.get(request_id, ()),
+                      key=lambda p: p.index_in_seq)

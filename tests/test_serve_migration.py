@@ -109,6 +109,71 @@ def test_batched_roundtrip_preserves_contents():
         assert np.array_equal(before[pid], after)
 
 
+def test_batched_migration_empty_lists_are_noops():
+    """Empty id lists must not touch pools, counters or transfer probes —
+    the prefix backend routinely enforces plans with nothing to move."""
+    pool = make_pool()
+    before = (page_state(pool), pool_bits(pool), pool.swaps_in,
+              pool.swaps_out, pool.bytes_moved, pool.transfer_events,
+              list(pool.free_hbm), list(pool.free_host))
+    pool.swap_out_many([])
+    pool.swap_in_many([])
+    pool.exchange([], [])
+    after = (page_state(pool), pool_bits(pool), pool.swaps_in,
+             pool.swaps_out, pool.bytes_moved, pool.transfer_events,
+             list(pool.free_hbm), list(pool.free_host))
+    assert before == after
+
+
+def test_batched_migration_duplicate_ids_move_once():
+    """Duplicate ids in one batch must behave exactly like the deduplicated
+    batch (a duplicate that moved twice would corrupt the free lists)."""
+    results = {}
+    for dup in (False, True):
+        pool = make_pool(seed=3)
+        r0 = pool.request_pages(0)
+        out_ids = [r0[0].page_id, r0[1].page_id]
+        in_ids = [r0[2].page_id]
+        if dup:
+            out_ids = out_ids + out_ids[:1] * 3
+            in_ids = in_ids * 2
+        pool.exchange(out_ids, in_ids)
+        pool.swap_in_many(out_ids + out_ids)      # duplicates again
+        pool.swap_out_many(in_ids + in_ids)
+        results[dup] = (page_state(pool), pool_bits(pool), pool.swaps_in,
+                        pool.swaps_out, pool.bytes_moved,
+                        sorted(pool.free_hbm), sorted(pool.free_host))
+    assert results[True] == results[False], \
+        "duplicate ids must migrate once, identically to the deduped batch"
+
+
+def test_batched_migration_refcounted_pages_parity():
+    """Pages shared by multiple requests (refcount > 1) migrate exactly
+    like single-owner pages: one physical move, every holder's page list
+    sees the same slot, batched == per-page."""
+    results = {}
+    for path in ("batched", "per_page"):
+        pool = make_pool(seed=11)
+        # Request 2 shares request 0's leading resident pages.
+        shared = [p for p in pool.request_pages(0) if p.hbm_slot is not None]
+        for p in shared:
+            pool.attach(2, p.page_id, step=1)
+        ids = [p.page_id for p in shared]
+        if path == "batched":
+            pool.swap_out_many(ids)
+            pool.swap_in_many(ids)
+        else:
+            for pid in ids:
+                pool.swap_out(pid)
+            for pid in ids:
+                pool.swap_in(pid)
+        assert all(p.refcount == 2 for p in shared)
+        assert [p.page_id for p in pool.request_pages(2)] == ids
+        results[path] = (page_state(pool), pool_bits(pool), pool.swaps_in,
+                         pool.swaps_out, pool.bytes_moved)
+    assert results["batched"] == results["per_page"]
+
+
 def test_migration_storm_leaves_decode_unchanged():
     """Engine-level: forcing whole-pool round-trip migrations between steps
     must not change a single generated token."""
