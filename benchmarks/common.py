@@ -36,7 +36,7 @@ def git_rev() -> str:
             ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
             timeout=10, cwd=os.path.dirname(os.path.dirname(
                 os.path.abspath(__file__)))).stdout.strip() or "unknown"
-    except Exception:
+    except (OSError, subprocess.SubprocessError, ValueError):
         return "unknown"
 
 

@@ -24,7 +24,8 @@ def main():
 
     # --- train a few steps -------------------------------------------------
     opt = AdamW(lr=1e-2, weight_decay=0.0)
-    trainer = Trainer(model, opt, TrainerConfig(steps=20, log_every=5))
+    trainer = Trainer(model, opt,
+                      TrainerConfig(steps=20, log_every=5, seed=0))
     src = SyntheticLM(cfg.vocab, seq_len=64, global_batch=8, seed=0)
 
     def batches():

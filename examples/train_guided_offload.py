@@ -62,7 +62,8 @@ def main():
     opt = AdamW(lr=cosine_schedule(3e-3, warmup=steps // 10, total=steps))
     trainer = Trainer(model, opt,
                       TrainerConfig(steps=steps,
-                                    log_every=max(steps // 10, 1), gdt=gdt))
+                                    log_every=max(steps // 10, 1), gdt=gdt,
+                                    seed=0))
 
     src = SyntheticLM(cfg.vocab, seq_len=256 if not args.tiny else 64,
                       global_batch=8, seed=0)

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Run the repro.check static contract linter over the tree.
+#
+#   ./scripts/check.sh                          # text report
+#   ./scripts/check.sh --format json            # machine-readable
+#   ./scripts/check.sh src/repro/serve          # a subtree
+#
+# Exit code is the finding count (0 = clean), which is the CI gate.
+# Arguments are passed straight through to `python -m repro.check`; when
+# no path operand is given the full checked tree is used.
+set -u
+cd "$(dirname "$0")/.."
+
+paths_given=0
+expect_value=0
+for arg in "$@"; do
+    if [ "$expect_value" -eq 1 ]; then
+        expect_value=0
+        continue
+    fi
+    case "$arg" in
+        --format|--rules|--output) expect_value=1 ;;
+        --*) ;;
+        *) paths_given=1 ;;
+    esac
+done
+
+if [ "$paths_given" -eq 0 ]; then
+    set -- src tests benchmarks examples "$@"
+fi
+
+mkdir -p results
+PYTHONPATH=src exec python -m repro.check "$@"

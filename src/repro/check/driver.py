@@ -1,0 +1,71 @@
+"""File discovery + the check loop: parse each module once, run every
+registered rule over it, filter suppressions, sort deterministically."""
+
+from __future__ import annotations
+
+import os
+from typing import Iterable, List, Optional, Sequence
+
+from .registry import Module, all_rules
+from .report import Finding
+
+# Directory names skipped during traversal.  ``check_fixtures`` holds the
+# deliberately-contract-violating rule fixtures: the tests check them by
+# explicit path (explicit files always win over the exclude list).
+DEFAULT_EXCLUDE_DIRS = {"check_fixtures", "__pycache__", ".git",
+                        ".pytest_cache", "results"}
+
+
+def iter_py_files(paths: Sequence[str],
+                  exclude_dirs: Optional[Iterable[str]] = None) -> List[str]:
+    excluded = (DEFAULT_EXCLUDE_DIRS if exclude_dirs is None
+                else set(exclude_dirs))
+    out: List[str] = []
+    for path in paths:
+        if os.path.isfile(path):
+            out.append(path)
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(d for d in dirs if d not in excluded)
+            out.extend(os.path.join(root, f) for f in sorted(files)
+                       if f.endswith(".py"))
+    return sorted(dict.fromkeys(out))
+
+
+def load_module(path: str) -> Module:
+    with open(path, "r", encoding="utf-8") as f:
+        return Module.load(path, f.read())
+
+
+def run_check(paths: Sequence[str],
+              rule_ids: Optional[Sequence[str]] = None,
+              exclude_dirs: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Run the (selected) rules over every .py file under ``paths``.
+
+    Returns the unsuppressed findings, sorted by (path, line, col, rule).
+    An unparsable file yields one CHK00 finding instead of crashing the
+    sweep.
+    """
+    rules = all_rules()
+    if rule_ids is not None:
+        unknown = sorted(set(rule_ids) - set(rules))
+        if unknown:
+            raise ValueError(f"unknown rule ids: {', '.join(unknown)} "
+                             f"(registered: {', '.join(rules)})")
+        rules = {rid: rules[rid] for rid in rules if rid in set(rule_ids)}
+
+    findings: List[Finding] = []
+    for path in iter_py_files(paths, exclude_dirs=exclude_dirs):
+        try:
+            module = load_module(path)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            findings.append(Finding(
+                path=path, line=getattr(e, "lineno", 1) or 1, col=1,
+                rule="CHK00",
+                message=f"file does not parse: {type(e).__name__}: {e}"))
+            continue
+        for rule in rules.values():
+            for f in rule.check(module):
+                if not module.suppressed(f):
+                    findings.append(f)
+    return sorted(findings)

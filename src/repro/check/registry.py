@@ -1,0 +1,82 @@
+"""The rule registry and the per-module analysis context.
+
+A rule is a class with a stable ``id``, a one-line ``title`` and a
+``check(module)`` generator.  Registration is by decorator; the CLI and
+the test suite both iterate ``all_rules()``, so a rule module only needs
+to be imported (``rules/__init__.py`` does that) to participate.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Set, Type
+
+from . import callgraph, suppress
+from .report import Finding
+
+
+@dataclasses.dataclass
+class Module:
+    """Everything a rule needs to know about one source file."""
+
+    path: str
+    source: str
+    lines: List[str]
+    tree: ast.Module
+    imports: callgraph.Imports
+    parents: Dict[ast.AST, ast.AST]
+    functions: Dict[str, ast.FunctionDef]
+    suppressions: Dict[int, Set[str]]
+    malformed: List[suppress.Malformed]
+
+    @classmethod
+    def load(cls, path: str, source: str) -> "Module":
+        tree = ast.parse(source, filename=path)
+        lines = source.splitlines()
+        suppressed, malformed = suppress.parse(lines)
+        return cls(
+            path=path, source=source, lines=lines, tree=tree,
+            imports=callgraph.Imports.of(tree),
+            parents=callgraph.parent_map(tree),
+            functions=callgraph.local_functions(tree),
+            suppressions=suppressed, malformed=malformed)
+
+    def finding(self, node: ast.AST, rule: str, message: str) -> Finding:
+        return Finding(path=self.path, line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       rule=rule, message=message)
+
+    def suppressed(self, f: Finding) -> bool:
+        rules = self.suppressions.get(f.line, ())
+        return f.rule in rules
+
+
+class Rule:
+    """Base class; subclasses set ``id``/``title`` and yield Findings."""
+
+    id: str = ""
+    title: str = ""
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    assert cls.id and cls.title, f"{cls.__name__} must set id and title"
+    assert cls.id not in _RULES, f"duplicate rule id {cls.id}"
+    _RULES[cls.id] = cls()
+    return cls
+
+
+def all_rules() -> Dict[str, Rule]:
+    from . import rules  # noqa: F401  (importing registers everything)
+
+    return dict(sorted(_RULES.items()))
+
+
+def get_rule(rule_id: str) -> Rule:
+    return all_rules()[rule_id]

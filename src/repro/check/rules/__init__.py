@@ -1,0 +1,3 @@
+"""Importing this package registers every rule with the registry."""
+
+from . import chk00, det01, det02, exc01, krn01, kv01, spmd01  # noqa: F401

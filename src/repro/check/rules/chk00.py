@@ -1,0 +1,26 @@
+"""CHK00 — linter hygiene.
+
+Malformed suppression directives (no rule list, or no ``-- reason``)
+surface here instead of being silently honored or ignored: a suppression
+is a reviewed contract exception and must carry its justification.
+Unparsable files are reported under the same id by the driver.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+from ..registry import Module, Rule, register
+from ..report import Finding
+
+
+@register
+class Chk00(Rule):
+    id = "CHK00"
+    title = ("linter hygiene: unparsable file or malformed suppression "
+             "(reason is mandatory)")
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        for m in module.malformed:
+            yield Finding(path=module.path, line=m.line, col=1,
+                          rule=self.id, message=m.message)

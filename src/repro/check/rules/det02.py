@@ -1,0 +1,185 @@
+"""DET02 — PRNG key discipline (the PR 5 sampling-determinism contract).
+
+Two patterns:
+
+1. *Key reuse*: the same key variable feeding two ``jax.random.*``
+   consumers without an intervening ``split``/``fold_in``/reassignment.
+   Reused keys make "independent" draws identical — the exact bug class
+   the per-row ``fold_in(PRNGKey(seed), position)`` scheme exists to
+   prevent.  The analysis is function-local and branch-aware (uses on
+   the two arms of an ``if`` don't accumulate against each other); a
+   consumer inside a loop whose key was created outside it counts as
+   reuse, because every iteration redraws the same bits.
+
+2. *Hardcoded fallback keys*: ``PRNGKey(<literal>)`` as a parameter
+   default or as the fallback arm of ``x if x is not None else ...`` /
+   ``x or ...``.  A silent constant default makes every caller share
+   one stream while looking seeded — require the key (or an explicit
+   seed) instead.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Set, Tuple
+
+from ..registry import Module, Rule, register
+from ..report import Finding
+
+# jax.random.* callables that CONSUME a key (draw bits from it).  split /
+# fold_in / key utilities derive fresh keys and are the sanctioned way to
+# use one key twice.
+_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "key_data",
+             "wrap_key_data", "clone", "key_impl"}
+
+
+def _is_jax_random(qn) -> bool:
+    return qn is not None and (qn.startswith("jax.random.")
+                               or qn.startswith("jax._src.random."))
+
+
+def _consumed_key(node: ast.Call, module: Module):
+    """The key variable name if this call consumes a bare Name key."""
+    qn = module.imports.qualname(node.func)
+    if not _is_jax_random(qn) or qn.split(".")[-1] in _DERIVERS:
+        return None
+    args = list(node.args) + [kw.value for kw in node.keywords
+                              if kw.arg in ("key", "rng")]
+    if args and isinstance(args[0], ast.Name):
+        return args[0].id
+    return None
+
+
+def _assigned_names(target: ast.expr) -> Set[str]:
+    out: Set[str] = set()
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+    return out
+
+
+class _FnScan:
+    """Sequential, branch-forking scan of one function body."""
+
+    def __init__(self, module: Module):
+        self.module = module
+        self.findings: List[Tuple[int, Finding]] = []
+        self.reported: Set[Tuple[int, str]] = set()
+
+    def run(self, fn: ast.AST) -> List[Finding]:
+        self._stmts(list(getattr(fn, "body", [])), {}, in_loop=False)
+        return [f for _, f in sorted(self.findings,
+                                     key=lambda t: (t[0], t[1].line))]
+
+    # counts: key name -> consumptions since its last (re)definition
+    def _stmts(self, body, counts: Dict[str, int], in_loop: bool) -> None:
+        for stmt in body:
+            self._stmt(stmt, counts, in_loop)
+
+    def _stmt(self, stmt: ast.stmt, counts: Dict[str, int],
+              in_loop: bool) -> None:
+        if isinstance(stmt, ast.If):
+            a, b = dict(counts), dict(counts)
+            self._stmts(stmt.body, a, in_loop)
+            self._stmts(stmt.orelse, b, in_loop)
+            for k in set(a) | set(b):
+                counts[k] = max(a.get(k, 0), b.get(k, 0))
+            return
+        if isinstance(stmt, (ast.For, ast.While)):
+            # Keys minted before the loop and consumed inside it redraw
+            # the same bits every iteration: scan the body twice so the
+            # second pass sees the first pass's consumption.
+            self._stmts(stmt.body, counts, in_loop=True)
+            self._stmts(stmt.body, counts, in_loop=True)
+            self._stmts(stmt.orelse, counts, in_loop)
+            return
+        if isinstance(stmt, (ast.With,)):
+            self._stmts(stmt.body, counts, in_loop)
+            return
+        if isinstance(stmt, (ast.Try,)):
+            self._stmts(stmt.body, counts, in_loop)
+            for h in stmt.handlers:
+                self._stmts(h.body, dict(counts), in_loop)
+            self._stmts(stmt.orelse, counts, in_loop)
+            self._stmts(stmt.finalbody, counts, in_loop)
+            return
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return                    # nested defs get their own scan
+        # Straight-line statement: consumptions first, then redefinitions.
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call):
+                name = _consumed_key(node, self.module)
+                if name is None:
+                    continue
+                counts[name] = counts.get(name, 0) + 1
+                if counts[name] > 1:
+                    key = (node.lineno, name)
+                    if key not in self.reported:
+                        self.reported.add(key)
+                        self.findings.append((node.lineno, self.module.finding(
+                            node, "DET02",
+                            f"PRNG key '{name}' reused by a second "
+                            f"jax.random consumer — split or fold_in "
+                            f"between draws, or the streams are "
+                            f"identical")))
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                for name in _assigned_names(t):
+                    counts[name] = 0
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            for name in _assigned_names(stmt.target):
+                counts[name] = 0
+
+
+def _literal_prngkey(node: ast.expr, module: Module) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    qn = module.imports.qualname(node.func)
+    if qn is None or qn.split(".")[-1] not in ("PRNGKey", "key"):
+        return False
+    if not _is_jax_random(qn) and not qn.endswith(
+            ("random.PRNGKey", "random.key")):
+        return False
+    return bool(node.args) and isinstance(node.args[0], ast.Constant)
+
+
+@register
+class Det02(Rule):
+    id = "DET02"
+    title = ("PRNG key reuse without split/fold_in, or a hardcoded "
+             "PRNGKey(<literal>) fallback default")
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        for fn in module.functions.values():
+            yield from _FnScan(module).run(fn)
+        for node in ast.walk(module.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                defaults = (list(node.args.defaults)
+                            + [d for d in node.args.kw_defaults if d])
+                for d in defaults:
+                    if _literal_prngkey(d, module):
+                        yield module.finding(
+                            d, self.id,
+                            "hardcoded PRNGKey literal as a parameter "
+                            "default shares one stream across all "
+                            "callers — require a key or an explicit "
+                            "seed")
+            elif isinstance(node, ast.IfExp):
+                for arm in (node.body, node.orelse):
+                    if _literal_prngkey(arm, module):
+                        yield module.finding(
+                            arm, self.id,
+                            "hardcoded PRNGKey literal as a silent "
+                            "fallback — require a key or derive from an "
+                            "explicit config seed")
+            elif isinstance(node, ast.BoolOp) and isinstance(node.op,
+                                                             ast.Or):
+                for arm in node.values[1:]:
+                    if _literal_prngkey(arm, module):
+                        yield module.finding(
+                            arm, self.id,
+                            "hardcoded PRNGKey literal as an 'or' "
+                            "fallback — require a key or derive from an "
+                            "explicit config seed")

@@ -1,0 +1,299 @@
+"""KRN01 — the Pallas grid / BlockSpec / masked-store contract.
+
+For every ``pl.pallas_call`` site the rule recovers the declared grid
+(literal tuple, or a name bound to one in the enclosing function), the
+scalar-prefetch count (``PrefetchScalarGridSpec``), the Block Specs and
+the kernel function, then checks:
+
+* **arity** — every index map must take exactly ``rank(grid) +
+  num_scalar_prefetch`` positional parameters (closure-capture defaults
+  like ``lambda i, j, G=G:`` don't count);
+* **rank** — an index map returning a literal tuple must return one
+  block index per ``block_shape`` dimension;
+* **bounds** — literal block indices are interpreted against the literal
+  grid/out_shape when both are static: negative indices, or a constant
+  index >= the block count of that dimension, are flagged;
+* **revisited stores** (the PR 2/3 grouped-GEMM bug class) — when an
+  output BlockSpec's index map ignores a grid axis, or gathers its block
+  index through a scalar-prefetch array (``mids[i]``), several grid
+  steps hit the same output block.  Every plain store to that output ref
+  must then be masked: under a ``pl.when``-decorated sub-function, or a
+  ``jnp.where`` select.  An unguarded ``ref[...] = x`` there is exactly
+  the ragged-boundary overwrite that produced garbage at segment ends.
+
+Sites whose grid or specs cannot be resolved statically are skipped —
+the rule under-reports rather than guessing.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+from .. import callgraph
+from ..registry import Module, Rule, register
+from ..report import Finding
+
+
+def _last(qn: Optional[str]) -> str:
+    return qn.split(".")[-1] if qn else ""
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _int_literal(node: Optional[ast.expr]) -> Optional[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    return None
+
+
+def _resolve_tuple(node: Optional[ast.expr], module: Module,
+                   site: ast.AST) -> Optional[ast.Tuple]:
+    """A tuple expression, following one level of local assignment."""
+    if isinstance(node, ast.Tuple):
+        return node
+    if isinstance(node, ast.Name):
+        scope = callgraph.enclosing(
+            site, module.parents, (ast.FunctionDef, ast.AsyncFunctionDef))
+        value = callgraph.resolve_assignment(
+            node.id, scope, module.tree)
+        if isinstance(value, ast.Tuple):
+            return value
+    return None
+
+
+def _spec_list(node: Optional[ast.expr]) -> List[ast.Call]:
+    """BlockSpec calls from an in_specs/out_specs expression."""
+    if node is None:
+        return []
+    items = node.elts if isinstance(node, (ast.List, ast.Tuple)) else [node]
+    return [it for it in items
+            if isinstance(it, ast.Call) and _last_name(it.func) == "BlockSpec"]
+
+
+def _last_name(node: ast.expr) -> str:
+    while isinstance(node, ast.Attribute):
+        return node.attr
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _block_spec_parts(spec: ast.Call):
+    """(block_shape tuple|None, index_map lambda|None)."""
+    shape = spec.args[0] if spec.args else _kwarg(spec, "block_shape")
+    imap = (spec.args[1] if len(spec.args) > 1
+            else _kwarg(spec, "index_map"))
+    shape_t = shape if isinstance(shape, ast.Tuple) else None
+    imap_l = imap if isinstance(imap, ast.Lambda) else None
+    return shape_t, imap_l
+
+
+def _kernel_def(arg: ast.expr, module: Module) -> Optional[ast.FunctionDef]:
+    if isinstance(arg, ast.Name):
+        return module.functions.get(arg.id)
+    if isinstance(arg, ast.Call) and _last(module.imports.qualname(
+            arg.func)) == "partial" and arg.args:
+        return _kernel_def(arg.args[0], module)
+    return None
+
+
+def _positional_params(fn) -> List[str]:
+    args = fn.args
+    names = [a.arg for a in args.posonlyargs + args.args]
+    n_default = len(args.defaults)
+    return names[: len(names) - n_default] if n_default else names
+
+
+def _guarded(store: ast.AST, kernel: ast.FunctionDef,
+             parents) -> bool:
+    """Masked store: under a pl.when-decorated def / a conditional, or a
+    where-select value."""
+    value = getattr(store, "value", None)
+    for node in ast.walk(value) if value is not None else []:
+        if isinstance(node, ast.Call) and _last_name(node.func) == "where":
+            return True
+    cur = parents.get(store)
+    while cur is not None and cur is not kernel:
+        if isinstance(cur, ast.If):
+            return True
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in cur.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                if _last_name(target) == "when":
+                    return True
+        cur = parents.get(cur)
+    return False
+
+
+class _Site:
+    """One resolved pallas_call invocation."""
+
+    def __init__(self, call: ast.Call, module: Module):
+        self.call = call
+        self.module = module
+        self.n_prefetch = 0
+        spec = _kwarg(call, "grid_spec")
+        if isinstance(spec, ast.Name):
+            scope = callgraph.enclosing(
+                call, module.parents,
+                (ast.FunctionDef, ast.AsyncFunctionDef))
+            spec = callgraph.resolve_assignment(
+                spec.id, scope, module.tree) or spec
+        src = call
+        if isinstance(spec, ast.Call) and \
+                _last_name(spec.func) == "PrefetchScalarGridSpec":
+            src = spec
+            self.n_prefetch = _int_literal(
+                _kwarg(spec, "num_scalar_prefetch")) or 0
+        self.grid = _resolve_tuple(_kwarg(src, "grid"), module, call)
+        self.rank = len(self.grid.elts) if self.grid is not None else None
+        self.in_specs = _spec_list(_kwarg(src, "in_specs"))
+        self.out_specs = _spec_list(_kwarg(src, "out_specs"))
+        self.out_shape = _kwarg(call, "out_shape")
+        self.kernel = (_kernel_def(call.args[0], module)
+                       if call.args else None)
+
+    def grid_extent(self, axis: int) -> Optional[int]:
+        if self.grid is None or axis >= len(self.grid.elts):
+            return None
+        return _int_literal(self.grid.elts[axis])
+
+
+def _block_counts(site: _Site, shape_t: ast.Tuple) -> List[Optional[int]]:
+    """Blocks per dimension when out_shape and block_shape are literal."""
+    dims: Sequence[Optional[int]] = []
+    out = site.out_shape
+    if isinstance(out, ast.Call) and \
+            _last_name(out.func) == "ShapeDtypeStruct" and out.args:
+        tup = out.args[0]
+        if isinstance(tup, ast.Tuple):
+            dims = [_int_literal(e) for e in tup.elts]
+    counts: List[Optional[int]] = []
+    for i, be in enumerate(shape_t.elts):
+        b = _int_literal(be)
+        d = dims[i] if i < len(dims) else None
+        counts.append(-(-d // b) if (b and d is not None) else None)
+    return counts
+
+
+@register
+class Krn01(Rule):
+    id = "KRN01"
+    title = ("Pallas BlockSpec contract: index-map arity/rank, literal "
+             "out-of-bounds blocks, unguarded stores to revisited "
+             "output blocks")
+
+    def check(self, module: Module) -> Iterator[Finding]:
+        for node in ast.walk(module.tree):
+            if not (isinstance(node, ast.Call)
+                    and _last(module.imports.qualname(
+                        node.func)) == "pallas_call"):
+                continue
+            site = _Site(node, module)
+            specs = ([(s, False) for s in site.in_specs]
+                     + [(s, True) for s in site.out_specs])
+            for spec, is_out in specs:
+                yield from self._check_spec(site, spec, is_out)
+
+    def _check_spec(self, site: _Site, spec: ast.Call,
+                    is_out: bool) -> Iterator[Finding]:
+        module = site.module
+        shape_t, imap = _block_spec_parts(spec)
+        if imap is None:
+            return
+        params = [a.arg for a in imap.args.args]
+        n_default = len(imap.args.defaults)
+        positional = params[: len(params) - n_default] if n_default \
+            else params
+        if site.rank is not None:
+            expected = site.rank + site.n_prefetch
+            if len(positional) != expected:
+                yield module.finding(
+                    imap, self.id,
+                    f"index map takes {len(positional)} grid/prefetch "
+                    f"parameters but the grid declares {site.rank} "
+                    f"axes + {site.n_prefetch} scalar-prefetch refs "
+                    f"(= {expected})")
+                return
+        body = imap.body
+        returned = body.elts if isinstance(body, ast.Tuple) else None
+        if returned is not None and shape_t is not None and \
+                len(returned) != len(shape_t.elts):
+            yield module.finding(
+                imap, self.id,
+                f"index map returns {len(returned)} block indices for a "
+                f"{len(shape_t.elts)}-dimensional block_shape")
+            return
+        if returned is not None and shape_t is not None and is_out:
+            counts = _block_counts(site, shape_t)
+            for dim, expr in enumerate(returned):
+                v = _int_literal(expr)
+                neg = (isinstance(expr, ast.UnaryOp)
+                       and isinstance(expr.op, ast.USub)
+                       and _int_literal(expr.operand) is not None)
+                if neg:
+                    yield module.finding(
+                        expr, self.id,
+                        f"index map emits a negative block index for "
+                        f"output dimension {dim}")
+                elif v is not None and dim < len(counts) and \
+                        counts[dim] is not None and v >= counts[dim]:
+                    yield module.finding(
+                        expr, self.id,
+                        f"constant block index {v} is out of bounds for "
+                        f"output dimension {dim} "
+                        f"({counts[dim]} blocks)")
+        if is_out and site.rank is not None:
+            yield from self._check_revisit(site, imap, positional)
+
+    def _check_revisit(self, site: _Site, imap: ast.Lambda,
+                       positional: List[str]) -> Iterator[Finding]:
+        module = site.module
+        grid_params = positional[: site.rank]
+        prefetch_params = set(positional[site.rank:])
+        used = {n.id for n in ast.walk(imap.body)
+                if isinstance(n, ast.Name)}
+        unused_axes = [p for p in grid_params if p not in used]
+        # Grid axes of literal extent 1 can't revisit anything.
+        unused_axes = [p for p in unused_axes
+                       if site.grid_extent(grid_params.index(p)) != 1]
+        gathered = any(
+            isinstance(n, ast.Subscript) and isinstance(n.value, ast.Name)
+            and n.value.id in prefetch_params
+            for n in ast.walk(imap.body))
+        if not unused_axes and not gathered:
+            return
+        kernel = site.kernel
+        if kernel is None:
+            return
+        n_in = len(site.in_specs)
+        params = _positional_params(kernel)
+        out_slot = site.n_prefetch + n_in
+        n_out = max(len(site.out_specs), 1)
+        out_refs = set(params[out_slot: out_slot + n_out])
+        if not out_refs:
+            return
+        parents = callgraph.parent_map(kernel)
+        why = (f"grid axis '{unused_axes[0]}' is unused by the out-spec "
+               f"index map" if unused_axes else
+               "the out-spec block index gathers through a "
+               "scalar-prefetch array")
+        for node in ast.walk(kernel):
+            if isinstance(node, ast.Assign) and any(
+                    isinstance(t, ast.Subscript)
+                    and isinstance(t.value, ast.Name)
+                    and t.value.id in out_refs for t in node.targets):
+                if not _guarded(node, kernel, parents):
+                    ref = next(t.value.id for t in node.targets
+                               if isinstance(t, ast.Subscript)
+                               and isinstance(t.value, ast.Name))
+                    yield module.finding(
+                        node, self.id,
+                        f"output block is revisited across grid steps "
+                        f"({why}) but kernel '{kernel.name}' stores to "
+                        f"'{ref}' unguarded — wrap the store in pl.when "
+                        f"or mask it with jnp.where")

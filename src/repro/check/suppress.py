@@ -1,0 +1,86 @@
+"""Inline suppressions: ``# check: disable=RULE[,RULE...] -- reason``.
+
+The reason is mandatory — a suppression is a reviewed exception to a
+contract, and the justification must live next to it.  A directive with
+no reason (or no parseable rule list) is reported as CHK00 instead of
+honored.
+
+Placement: a trailing comment binds to its own line; a comment-only line
+binds to the next line of code below it (blank lines and further
+comments are skipped downward).  Directives are recognized in real
+comment tokens only, so docstrings that *mention* the syntax are inert.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+from typing import Dict, List, Set, Tuple
+
+_DIRECTIVE = re.compile(
+    r"#\s*check:\s*disable=([A-Za-z0-9_,\s]*?)\s*(?:--\s*(\S.*))?$")
+
+
+@dataclasses.dataclass
+class Malformed:
+    line: int
+    message: str
+
+
+def _comments(lines: List[str]):
+    """(line, col, text) for every comment token; tolerant of files that
+    tokenize rejects (the parser reports those separately)."""
+    out = []
+    reader = io.StringIO("\n".join(lines) + "\n").readline
+    try:
+        for tok in tokenize.generate_tokens(reader):
+            if tok.type == tokenize.COMMENT:
+                out.append((tok.start[0], tok.start[1], tok.string))
+    except (tokenize.TokenizeError, IndentationError, SyntaxError):
+        pass
+    return out
+
+
+def _bind_line(lines: List[str], line: int, col: int) -> int:
+    """Standalone comments bind to the next code line below them."""
+    if lines[line - 1][:col].strip():
+        return line                   # trailing comment: binds in place
+    j = line + 1
+    while j <= len(lines):
+        s = lines[j - 1].strip()
+        if s and not s.startswith("#"):
+            return j
+        j += 1
+    return line
+
+
+def parse(lines: List[str]) -> Tuple[Dict[int, Set[str]], List[Malformed]]:
+    """Map line -> suppressed rule ids, plus the malformed directives."""
+    suppressed: Dict[int, Set[str]] = {}
+    malformed: List[Malformed] = []
+    for line, col, text in _comments(lines):
+        m = _DIRECTIVE.search(text)
+        if m is None:
+            if "check: disable" in text:
+                malformed.append(Malformed(
+                    line, "unparseable suppression directive (expected "
+                          "'# check: disable=RULE -- reason')"))
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        reason = m.group(2)
+        if not rules:
+            malformed.append(Malformed(
+                line, "suppression names no rules (expected "
+                      "'# check: disable=RULE -- reason')"))
+            continue
+        if not reason:
+            malformed.append(Malformed(
+                line, f"suppression of {','.join(sorted(rules))} has no "
+                      f"reason — append ' -- <why this exception is "
+                      f"sound>'"))
+            continue
+        target = _bind_line(lines, line, col)
+        suppressed.setdefault(target, set()).update(rules)
+    return suppressed, malformed

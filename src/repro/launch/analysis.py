@@ -91,9 +91,11 @@ _DTYPE_BYTES = {"pred": 1}
 
 
 def _nbytes(aval) -> int:
+    # Abstract tokens / effects have no shape or dtype; everything else
+    # costs what its array says.
     try:
         return int(np.prod(aval.shape)) * aval.dtype.itemsize
-    except Exception:
+    except (AttributeError, TypeError):
         return 0
 
 
@@ -195,6 +197,8 @@ def _sub_jaxprs(params: Dict[str, Any]):
 
 
 def _while_trip_guess(eqn) -> int:
+    # A while eqn without the expected cond_jaxpr/Literal structure (jax
+    # version drift) estimates one trip rather than crashing the report.
     try:
         consts = []
         for e in eqn.params["cond_jaxpr"].jaxpr.eqns:
@@ -203,7 +207,7 @@ def _while_trip_guess(eqn) -> int:
                         and np.issubdtype(np.asarray(v.val).dtype, np.integer):
                     consts.append(int(v.val))
         return max(consts) if consts else 1
-    except Exception:
+    except (KeyError, AttributeError, TypeError, ValueError):
         return 1
 
 

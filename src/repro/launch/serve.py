@@ -58,7 +58,9 @@ def main():
         raise SystemExit("paged engine serves decoder LMs (dense/moe)")
     cfg = dataclasses.replace(cfg, remat=False)
     model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    # --seed governs BOTH param init and the per-session sampling streams
+    # (sessions fold their id in below): one flag reproduces a run.
+    params = model.init(jax.random.PRNGKey(args.seed))
     llm = LLM(model, params, ServeConfig(
         max_batch=args.max_batch, page_size=args.page_size,
         hbm_pages=args.hbm_pages, host_pages=args.host_pages,

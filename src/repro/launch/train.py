@@ -40,6 +40,8 @@ def main():
     p.add_argument("--batch", type=int, default=8)
     p.add_argument("--seq", type=int, default=128)
     p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--seed", type=int, default=0,
+                   help="param-init PRNG seed (threaded to the Trainer)")
     p.add_argument("--accum", type=int, default=1)
     p.add_argument("--compression", choices=["int8"], default=None)
     p.add_argument("--gdt-budget-mb", type=float, default=0,
@@ -66,7 +68,8 @@ def main():
     tcfg = TrainerConfig(
         steps=args.steps, log_every=max(args.steps // 20, 1),
         ckpt_every=args.ckpt_every, ckpt_dir=args.ckpt_dir, gdt=gdt,
-        step=StepConfig(accum=args.accum, compression=args.compression))
+        step=StepConfig(accum=args.accum, compression=args.compression),
+        seed=args.seed)
     trainer = Trainer(model, opt, tcfg)
     if args.restore and args.ckpt_dir:
         meta = trainer.restore_checkpoint()

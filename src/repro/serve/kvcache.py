@@ -83,9 +83,11 @@ class PagedKVPool:
         pool = lambda n: jnp.zeros((n_layers, n) + self.shape, dtype)
         dev = jax.devices()[0]
         kinds = []
+        # Capability probe: jaxlibs without memory-kind support either
+        # lack the method or refuse it at runtime; both mean "one tier".
         try:
             kinds = [m.kind for m in dev.addressable_memories()]
-        except Exception:
+        except (AttributeError, RuntimeError, NotImplementedError):
             pass
         self._dev_sharding = jax.sharding.SingleDeviceSharding(
             dev, memory_kind=DEVICE_KIND if DEVICE_KIND in kinds else None)

@@ -51,6 +51,10 @@ class TrainerConfig:
     ckpt_dir: Optional[str] = None
     gdt: Optional[GuidanceConfig] = None  # None = tiering disabled
     step: StepConfig = dataclasses.field(default_factory=StepConfig)
+    # Param-init seed when no explicit rng is passed to the Trainer.
+    # Deliberately not defaulted: a silent constant key would make every
+    # run share one init stream while looking seeded (rule DET02).
+    seed: Optional[int] = None
 
 
 class Trainer:
@@ -60,8 +64,14 @@ class Trainer:
         self.opt = opt
         self.cfg = cfg
         self.hw = hw
-        key = rng if rng is not None else jax.random.PRNGKey(0)
-        self.params = model.init(key)
+        if rng is None:
+            if cfg.seed is None:
+                raise ValueError(
+                    "Trainer needs randomness it can attribute: pass "
+                    "rng=jax.random.PRNGKey(seed) or set "
+                    "TrainerConfig.seed")
+            rng = jax.random.PRNGKey(cfg.seed)
+        self.params = model.init(rng)
         self.opt_state = opt.init(self.params)
         self.step_fn = jax.jit(make_train_step(model, opt, cfg.step),
                                donate_argnums=(0, 1))

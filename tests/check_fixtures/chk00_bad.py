@@ -1,0 +1,7 @@
+"""CHK00 fixture: malformed suppression directives (empty rule list, and
+a missing mandatory reason)."""
+
+X = 1  # check: disable=
+
+# check: disable=DET01
+Y = 2

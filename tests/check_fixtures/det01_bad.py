@@ -1,0 +1,25 @@
+"""DET01 fixture: nondeterminism reaching traced code."""
+
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def noisy(x):
+    jitter = random.random()
+    t0 = time.time()
+    return x * jitter + t0
+
+
+def body(x):
+    total = x
+    for axis in {0, 1}:
+        total = total + jnp.sum(x, axis=axis)
+    return total
+
+
+def run(x):
+    return jax.jit(body)(x)

@@ -1,0 +1,18 @@
+"""DET01 clean fixture: jax.random inside jit is sanctioned; wall-clock
+reads outside any traced entry point are host-side and fine."""
+
+import time
+
+import jax
+
+
+@jax.jit
+def scaled(x, key):
+    noise = jax.random.normal(key, x.shape)
+    return x + noise
+
+
+def timed_host_step(x, key):
+    t0 = time.time()
+    y = scaled(x, key)
+    return y, time.time() - t0

@@ -1,0 +1,25 @@
+"""DET02 fixture: key reuse and hardcoded fallback keys."""
+
+import jax
+
+
+def two_draws(key, shape):
+    a = jax.random.normal(key, shape)
+    b = jax.random.normal(key, shape)
+    return a + b
+
+
+def sample(key=jax.random.PRNGKey(0)):
+    return jax.random.uniform(key)
+
+
+def fallback(key):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return jax.random.uniform(key)
+
+
+def redraw_in_loop(key, n):
+    out = []
+    for _ in range(n):
+        out.append(jax.random.uniform(key))
+    return out

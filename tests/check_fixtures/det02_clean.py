@@ -1,0 +1,21 @@
+"""DET02 clean fixture: split/fold_in between draws, seed required."""
+
+import jax
+
+
+def two_draws(key, shape):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.normal(k1, shape)
+    b = jax.random.normal(k2, shape)
+    return a + b
+
+
+def per_position(key, n):
+    return [jax.random.uniform(jax.random.fold_in(key, i))
+            for i in range(n)]
+
+
+def from_seed(seed):
+    if seed is None:
+        raise ValueError("an explicit seed is required")
+    return jax.random.PRNGKey(seed)

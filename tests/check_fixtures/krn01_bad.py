@@ -1,0 +1,34 @@
+"""KRN01 fixture: index-map arity, OOB block index, unguarded store to a
+revisited output block."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def accum_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def revisited_unguarded(x):
+    return pl.pallas_call(
+        accum_kernel,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 8), jnp.float32),
+    )(x)
+
+
+def copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def oob_block(x):
+    return pl.pallas_call(
+        copy_kernel,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((8, 8), lambda i: (i, 5)),
+        out_shape=jax.ShapeDtypeStruct((32, 8), jnp.float32),
+    )(x)

@@ -1,0 +1,25 @@
+"""KRN01 clean fixture: the revisited output block is initialized under
+pl.when and accumulated into (augmented stores are the sanctioned
+revisit pattern)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def masked_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...]
+
+
+def grouped_accumulate(x):
+    return pl.pallas_call(
+        masked_kernel,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, 8), jnp.float32),
+    )(x)

@@ -1,0 +1,19 @@
+"""SPMD01 fixture: a collective naming an axis the shard_map does not
+bind, and a ppermute perm with duplicate sources."""
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def body(x):
+    return jax.lax.psum(x, "model")
+
+
+def run(mesh, x):
+    return shard_map(body, mesh=mesh, in_specs=(P("data"),),
+                     out_specs=P("data"))(x)
+
+
+def shifted(x):
+    return jax.lax.ppermute(x, "data", perm=[(0, 1), (0, 2)])

@@ -1,0 +1,17 @@
+"""SPMD01 clean fixture: collectives on the bound axis, rotation-idiom
+ppermute perm."""
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def body(x):
+    n = jax.lax.psum(x, "data")
+    return jax.lax.ppermute(
+        n, "data", perm=[(j, (j + 1) % 4) for j in range(4)])
+
+
+def run(mesh, x):
+    return shard_map(body, mesh=mesh, in_specs=(P("data"),),
+                     out_specs=P("data"))(x)

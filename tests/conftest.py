@@ -10,5 +10,6 @@ def has_host_memory() -> bool:
 
         kinds = [m.kind for m in jax.devices()[0].addressable_memories()]
         return "pinned_host" in kinds
-    except Exception:
+    except (ImportError, AttributeError, RuntimeError, IndexError,
+            NotImplementedError):
         return False

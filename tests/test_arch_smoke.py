@@ -82,15 +82,17 @@ def test_prefill_matches_decode(arch, rng):
     prefilled cache gives the same logits as pure step-by-step decode."""
     cfg = get_smoke(arch)
     model = build_model(cfg)
-    params = model.init(rng)
+    k_init, k_frames, k_tokens = jax.random.split(rng, 3)
+    params = model.init(k_init)
     B, S = 2, 8
     if cfg.family == "encdec":
         batch = {
-            "frames": jax.random.normal(rng, (B, S, cfg.d_model), cfg.dtype),
-            "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab),
+            "frames": jax.random.normal(
+                k_frames, (B, S, cfg.d_model), cfg.dtype),
+            "tokens": jax.random.randint(k_tokens, (B, S), 0, cfg.vocab),
         }
     else:
-        batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab)}
+        batch = {"tokens": jax.random.randint(k_tokens, (B, S), 0, cfg.vocab)}
     cache0 = model.init_cache(B, 16)
     # adapt cache seq to prompt for prefill outputs
     logits_p, cache_p = jax.jit(model.prefill)(params, batch, cache0)

@@ -1,0 +1,138 @@
+"""Tests for the ``repro.check`` static contract linter.
+
+Each rule has a bad + clean fixture pair under ``tests/check_fixtures/``;
+the bad ones assert exact rule ids and line numbers (they are the rule's
+specification), the golden JSON pins the full report format, and the
+self-run test is the PR gate: the linter must hold zero findings over
+the repo's own tree.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.check import all_rules, iter_py_files, run_check
+from repro.check.registry import Module
+from repro.check.report import render_json
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(ROOT, "tests", "check_fixtures")
+
+
+def fixture(name):
+    return os.path.join(FIXTURES, name)
+
+
+def found(path, rule_ids=None):
+    return [(f.rule, f.line) for f in run_check([path], rule_ids=rule_ids)]
+
+
+# (rule id, fixture stem, expected finding lines in the bad fixture)
+RULE_CASES = [
+    ("CHK00", "chk00", [4, 6]),
+    ("DET01", "det01", [12, 13, 19]),
+    ("DET02", "det02", [8, 12, 17, 24]),
+    ("EXC01", "exc01", [7, 14]),
+    ("KRN01", "krn01", [10, 17, 32]),
+    ("KV01", "kv01", [11, 16, 22]),
+    ("SPMD01", "spmd01", [10, 19]),
+]
+
+
+def test_every_registered_rule_has_a_fixture_case():
+    assert sorted(all_rules()) == sorted(r for r, _, _ in RULE_CASES)
+    assert len(all_rules()) >= 6
+
+
+@pytest.mark.parametrize("rule,stem,lines", RULE_CASES,
+                         ids=[r for r, _, _ in RULE_CASES])
+def test_bad_fixture_findings(rule, stem, lines):
+    got = found(fixture(f"{stem}_bad.py"))
+    assert got == [(rule, ln) for ln in lines]
+
+
+@pytest.mark.parametrize("rule,stem,lines", RULE_CASES,
+                         ids=[r for r, _, _ in RULE_CASES])
+def test_clean_fixture_is_clean(rule, stem, lines):
+    assert found(fixture(f"{stem}_clean.py")) == []
+
+
+def test_golden_json(monkeypatch):
+    monkeypatch.chdir(ROOT)
+    findings = run_check(["tests/check_fixtures"])
+    report = json.loads(render_json(
+        findings, {rid: r.title for rid, r in all_rules().items()}))
+    with open(fixture("golden.json"), encoding="utf-8") as f:
+        golden = json.load(f)
+    assert report == golden
+
+
+def test_self_run_is_clean(monkeypatch):
+    """The PR gate: the linter holds zero findings over the repo tree."""
+    monkeypatch.chdir(ROOT)
+    findings = run_check(["src", "tests", "benchmarks", "examples"])
+    assert findings == [], "\n".join(
+        f"{f.location()}: {f.rule} {f.message}" for f in findings)
+
+
+def test_fixtures_dir_excluded_from_traversal(monkeypatch):
+    monkeypatch.chdir(ROOT)
+    walked = iter_py_files(["tests"])
+    assert not any("check_fixtures" in p for p in walked)
+    # ...but explicit paths always win over the exclude list.
+    explicit = iter_py_files([fixture("exc01_bad.py")])
+    assert explicit == [fixture("exc01_bad.py")]
+
+
+def test_rule_filter_and_unknown_rule():
+    assert found(fixture("det01_bad.py"), rule_ids=["EXC01"]) == []
+    with pytest.raises(ValueError, match="NOPE"):
+        run_check([fixture("det01_bad.py")], rule_ids=["NOPE"])
+
+
+def test_unparsable_file_reports_chk00(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    got = run_check([str(bad)])
+    assert [(f.rule, f.path) for f in got] == [("CHK00", str(bad))]
+    assert "does not parse" in got[0].message
+
+
+def test_suppression_silences_only_named_rule():
+    src = (
+        "def probe(fn):\n"
+        "    try:\n"
+        "        fn()\n"
+        "    # check: disable=KV01 -- wrong rule on purpose\n"
+        "    except Exception:\n"
+        "        return None\n"
+    )
+    m = Module.load("inline.py", src)
+    exc01 = all_rules()["EXC01"]
+    findings = [f for f in exc01.check(m) if not m.suppressed(f)]
+    assert [(f.rule, f.line) for f in findings] == [("EXC01", 5)]
+
+
+def test_cli_exit_code_and_json(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = tmp_path / "report.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.check", fixture("exc01_bad.py"),
+         "--format", "json", "--output", str(out)],
+        capture_output=True, text=True, env=env, cwd=ROOT)
+    assert proc.returncode == 2          # exit code == finding count
+    report = json.loads(out.read_text())
+    assert report["count"] == 2
+    assert {f["rule"] for f in report["findings"]} == {"EXC01"}
+    assert set(report["rules"]) == set(all_rules())
+
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.check", "--list-rules"],
+        capture_output=True, text=True, env=env, cwd=ROOT)
+    assert proc.returncode == 0
+    for rid in all_rules():
+        assert rid in proc.stdout

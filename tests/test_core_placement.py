@@ -22,7 +22,7 @@ def has_host_memory():
     try:
         kinds = [m.kind for m in jax.devices()[0].addressable_memories()]
         return "pinned_host" in kinds
-    except Exception:
+    except (AttributeError, RuntimeError, IndexError, NotImplementedError):
         return False
 
 

@@ -36,7 +36,7 @@ def batches(model, n_steps, batch=4, seq=64):
 def test_loss_decreases():
     model = tiny_model()
     opt = AdamW(lr=1e-2, weight_decay=0.0)
-    tr = Trainer(model, opt, TrainerConfig(steps=60, log_every=1))
+    tr = Trainer(model, opt, TrainerConfig(steps=60, log_every=1, seed=0))
     res = tr.run(iter(batches(model, 60, batch=16)))
     losses = [m["loss"] for m in tr.metrics_log]
     assert min(losses[-5:]) < losses[0] * 0.95
@@ -135,10 +135,10 @@ def test_checkpoint_restart_in_trainer(tmp_path):
     data = batches(model, 12)
     tr = Trainer(model, opt,
                  TrainerConfig(steps=10, log_every=1, ckpt_every=5,
-                               ckpt_dir=str(tmp_path)))
+                               ckpt_dir=str(tmp_path), seed=0))
     tr.run(iter(data))
     tr2 = Trainer(model, opt, TrainerConfig(steps=1, log_every=1,
-                                            ckpt_dir=str(tmp_path)))
+                                            ckpt_dir=str(tmp_path), seed=0))
     meta = tr2.restore_checkpoint()
     assert meta["step"] == 10
     for a, b in zip(jax.tree.leaves(tr.params), jax.tree.leaves(tr2.params)):
