@@ -1,3 +1,12 @@
 """Importing this package registers every rule with the registry."""
 
-from . import chk00, det01, det02, exc01, krn01, kv01, spmd01  # noqa: F401
+from . import (  # noqa: F401
+    chk00,
+    det01,
+    det02,
+    exc01,
+    ft01,
+    krn01,
+    kv01,
+    spmd01,
+)

@@ -45,16 +45,19 @@ def plan_rescale(n_alive: int, old_shape: Tuple[int, ...],
     groups = n_alive // (model * lead_n)
     if groups >= 1:
         new_shape = tuple(lead) + (groups, model)
-        accum = -(-data // groups)
     else:
         # Not even one model group: shrink model to largest p2 divisor.
         m = 1
         while m * 2 <= n_alive:
             m *= 2
         new_shape = tuple(1 for _ in lead) + (1, m)
-        accum = data
+    # Global batch is preserved by gradient accumulation: the factor is the
+    # data-axis shrink ratio (ceil — never under-accumulate), computed the
+    # same way on both branches since the model-shrink branch also collapses
+    # the data axis to 1.
+    accum = -(-data // new_shape[-2])
     return RescalePlan(old_shape=old_shape, new_shape=new_shape,
-                       axis_names=axis_names, accum_factor=max(1, accum // max(new_shape[-2], 1)) if groups >= 1 else accum)
+                       axis_names=axis_names, accum_factor=max(1, accum))
 
 
 def reshard_state(tree, defs, new_mesh: Mesh, rules=None):

@@ -44,6 +44,24 @@ class HeartbeatMonitor:
     def add_spare(self, node_id: int):
         self.spares.append(node_id)
 
+    # ---------------------------------------------------------- membership
+    def add_node(self, node_id: int):
+        """Register a node after construction — elastic membership (a
+        serving replica joining the cluster, a spare being activated).
+        The node starts alive with its beat clock at ``now``."""
+        if node_id in self.nodes and node_id not in self.dead:
+            raise ValueError(
+                f"cannot add node {node_id}: already monitored and alive")
+        self.dead.discard(node_id)
+        self.nodes[node_id] = NodeStats(node_id, self.clock())
+
+    def remove_node(self, node_id: int):
+        """Forget a node entirely (graceful leave, or cleanup after its
+        failure was handled) — unknown ids are a no-op so teardown paths
+        can call it unconditionally."""
+        self.nodes.pop(node_id, None)
+        self.dead.discard(node_id)
+
     def beat(self, node_id: int, step_time_s: Optional[float] = None):
         if node_id in self.dead:
             return

@@ -63,7 +63,7 @@ def guidance_summary(events: Iterable[Any]) -> Dict[str, float]:
     }
 
 
-def serving_summary(engine) -> Dict[str, float]:
+def serving_summary(engine) -> Dict[str, Any]:
     """One view over the serving engine's scheduler/migration counters and
     (when guided) the controller's event stream.
 
@@ -76,7 +76,47 @@ def serving_summary(engine) -> Dict[str, float]:
     controller's unprefixed, the shared-prefix controller's under
     ``prefix_``.  Benchmarks and reports read serving telemetry through
     this function rather than poking at per-subsystem counters.
+
+    A ``serve.cluster.Router`` is accepted wherever an ``Engine`` is: the
+    top level is then the cluster AGGREGATE (counters summed over reachable
+    replicas — ``mean_``-prefixed scalars averaged — the prefix hit rate
+    recomputed from summed components, and the router's ``cluster_*``
+    lifecycle counters), with each replica's own flat summary under
+    ``summary["replicas"]["replica<id>"]``.  At N=1 the aggregate equals
+    the single engine's summary plus the ``cluster_*`` scalars, so
+    consumers indexing ``engine_*`` keys work at any replica count.
     """
+    if hasattr(engine, "replicas") and hasattr(engine, "tickets"):
+        router = engine
+        per = {f"replica{rep.replica_id}": serving_summary(rep.engine)
+               for rep in router.replicas if rep.reachable}
+        agg: Dict[str, Any] = {}
+        means: Dict[str, list] = {}
+        for summary in per.values():
+            for k, v in summary.items():
+                if not isinstance(v, (int, float)):
+                    continue
+                if "mean_" in k:
+                    means.setdefault(k, []).append(float(v))
+                else:
+                    agg[k] = agg.get(k, 0.0) + float(v)
+        for k, vals in means.items():
+            agg[k] = sum(vals) / len(vals)
+        if agg.get("engine_prefix_lookups"):
+            agg["engine_prefix_hit_rate"] = (
+                agg.get("engine_prefix_hit_requests", 0.0)
+                / agg["engine_prefix_lookups"])
+        agg.update({
+            "cluster_replicas": float(len(per)),
+            "cluster_migrations_warm": float(router.migrations_warm),
+            "cluster_migrations_cold": float(router.migrations_cold),
+            "cluster_failovers": float(router.failovers),
+            "cluster_restarts": float(router.restarts),
+            "cluster_requests_lost": float(router.requests_lost),
+        })
+        if len(per) > 1:
+            agg["replicas"] = per
+        return agg
     out = {f"engine_{k}": float(v) for k, v in engine.stats().items()}
     if getattr(engine, "runtime", None) is not None:
         out.update(guidance_summary(engine.runtime.events))

@@ -51,7 +51,18 @@ def main():
     p.add_argument("--shared-prefix-len", type=int, default=0,
                    help="give every session this many identical leading "
                         "prompt tokens (a synthetic shared system prompt)")
+    p.add_argument("--replicas", type=int, default=1,
+                   help="engine replicas behind the router (least-loaded "
+                        "dispatch; failures/drains migrate in-flight "
+                        "requests bitwise)")
+    p.add_argument("--rolling-restart", action="store_true",
+                   help="restart every replica in sequence at the run's "
+                        "midpoint (requires --replicas >= 2); in-flight "
+                        "requests warm-migrate to survivors")
     args = p.parse_args()
+    if args.rolling_restart and args.replicas < 2:
+        raise SystemExit("--rolling-restart needs --replicas >= 2 "
+                         "(a lone replica has no migration target)")
 
     cfg = get_smoke(args.arch) if args.smoke else get(args.arch)
     if cfg.family not in ("dense", "moe"):
@@ -65,7 +76,7 @@ def main():
         max_batch=args.max_batch, page_size=args.page_size,
         hbm_pages=args.hbm_pages, host_pages=args.host_pages,
         policy=args.policy, enable_prefix_cache=args.prefix_cache,
-        min_prefix_pages=args.min_prefix_pages))
+        min_prefix_pages=args.min_prefix_pages), replicas=args.replicas)
 
     rng = np.random.default_rng(0)
     shared = [int(t) for t in
@@ -84,7 +95,14 @@ def main():
     hot = list(range(min(2, args.sessions)))
     t0 = time.time()
     tokens = 0
+    # Rolling restart at the midpoint: replace every original replica one
+    # at a time while the workload keeps stepping — in-flight requests
+    # migrate (warm where pages fit) and no stream drops or changes.
+    restart_round = args.rounds // 2 if args.rolling_restart else -1
     for r in range(args.rounds):
+        if r == restart_round:
+            for rep_id in [rep.replica_id for rep in llm.cluster.replicas]:
+                llm.cluster.restart_replica(rep_id)
         for rid in hot:
             if llm.is_live(rid):
                 llm.resume(rid)

@@ -1,12 +1,13 @@
 from .api import DEFAULT_MAX_TOKENS, LLM, RequestHandle, RequestOutput
-from .engine import Engine, PagedKVBackend, Request, ServeConfig
+from .cluster import EngineReplica, ReplicaLostError, Router
+from .engine import Engine, PagedKVBackend, Request, RequestTicket, ServeConfig
 from .eviction import (
     EVICTION_POLICIES,
     EvictionPolicy,
     make_eviction_policy,
     register_eviction_policy,
 )
-from .kvcache import Page, PagedKVPool
+from .kvcache import Page, PageExport, PagedKVPool
 from .prefix_cache import PrefixBackend, PrefixCache, PrefixNode, block_hash
 from .sampling import SamplingParams
 
@@ -14,17 +15,22 @@ __all__ = [
     "DEFAULT_MAX_TOKENS",
     "EVICTION_POLICIES",
     "Engine",
+    "EngineReplica",
     "EvictionPolicy",
     "LLM",
     "Page",
+    "PageExport",
     "PagedKVBackend",
     "PagedKVPool",
     "PrefixBackend",
     "PrefixCache",
     "PrefixNode",
+    "ReplicaLostError",
     "Request",
     "RequestHandle",
     "RequestOutput",
+    "RequestTicket",
+    "Router",
     "SamplingParams",
     "ServeConfig",
     "block_hash",

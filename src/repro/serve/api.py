@@ -32,6 +32,7 @@ from typing import Deque, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..core import TPU_V5E, HardwareModel
+from .cluster import ReplicaLostError, Router
 from .engine import Engine, ServeConfig
 from .sampling import DEFAULT_MAX_TOKENS, SamplingParams
 
@@ -97,6 +98,16 @@ class RequestHandle:
                 continue
             req = self._llm.engine.requests.get(self.request_id)
             if req is None:
+                # The owning replica may have left the cluster without a
+                # survivor to rebuild the request: a NAMED error, never a
+                # hang or a raw KeyError (cold migration is transparent —
+                # a recovered request is simply live again on its new
+                # replica by the time we look).
+                lost = getattr(self._llm.engine, "lost_requests", None)
+                if lost and self.request_id in lost:
+                    raise ReplicaLostError(
+                        f"request {self.request_id} was lost: "
+                        f"{lost[self.request_id]}; resubmit to retry")
                 # Not live and not absorbable from engine.finished (the
                 # absorb above would have caught that): the result was
                 # drained behind our back — fail loudly rather than
@@ -126,25 +137,42 @@ class RequestHandle:
 
 
 class LLM:
-    """Generation front end over one serving ``Engine``.
+    """Generation front end over a cluster of serving engine replicas.
 
     Construct from a built model (``LLM(model, params)``) or straight from
     the architecture registry (``LLM.from_arch("llama3_2_1b")``).  All
     tiering/scheduling knobs stay on ``ServeConfig``; per-request behaviour
     stays on ``SamplingParams`` — the caller never touches pages, tiers or
-    batches.
+    batches.  ``replicas=N`` puts N engines behind the same front door
+    (``serve.cluster.Router``): requests dispatch least-loaded, and replica
+    failure/drain migrates in-flight streams bitwise instead of dropping
+    them.  The default ``replicas=1`` behaves exactly like the old
+    single-engine LLM — ``llm.engine`` then delegates engine attributes
+    transparently.
     """
 
     def __init__(self, model, params, cfg: Optional[ServeConfig] = None,
-                 hw: HardwareModel = TPU_V5E):
-        self.engine = Engine(model, params, cfg or ServeConfig(), hw)
+                 hw: HardwareModel = TPU_V5E, replicas: int = 1,
+                 heartbeat_timeout: float = 8.0):
+        cfg = cfg or ServeConfig()
+        self.cluster = Router(
+            lambda: Engine(model, params, cfg, hw),
+            n_replicas=replicas, heartbeat_timeout=heartbeat_timeout)
         self._handles: Dict[int, RequestHandle] = {}
         self._next_id = 0
+
+    @property
+    def engine(self) -> Router:
+        """The engine-shaped control surface (the ``Router``): merged
+        ``requests``/``finished`` views, cluster ``stats()``, and — on a
+        one-replica cluster — transparent delegation of single-engine
+        attributes (``engine.pool``, ``engine.prefix_cache``, ...)."""
+        return self.cluster
 
     @classmethod
     def from_arch(cls, arch: str, smoke: bool = True,
                   cfg: Optional[ServeConfig] = None,
-                  seed: int = 0) -> "LLM":
+                  seed: int = 0, replicas: int = 1) -> "LLM":
         import jax
 
         from ..configs import get, get_smoke
@@ -153,20 +181,23 @@ class LLM:
         mcfg = get_smoke(arch) if smoke else get(arch)
         mcfg = dataclasses.replace(mcfg, remat=False)
         model = build_model(mcfg)
-        return cls(model, model.init(jax.random.PRNGKey(seed)), cfg)
+        return cls(model, model.init(jax.random.PRNGKey(seed)), cfg,
+                   replicas=replicas)
 
     # ------------------------------------------------------------ submit
     def submit(self, prompt: Prompt,
                params: Optional[SamplingParams] = None,
-               request_id: Optional[int] = None) -> RequestHandle:
-        """Enqueue one request and return its streaming handle."""
+               request_id: Optional[int] = None,
+               replica_id: Optional[int] = None) -> RequestHandle:
+        """Enqueue one request and return its streaming handle.  Dispatch
+        is least-loaded across alive replicas; ``replica_id`` pins it."""
         params = params if params is not None else SamplingParams()
         rid = request_id if request_id is not None else self._next_id
         self._next_id = max(self._next_id, rid + 1)
         # The generation budget resolves inside add_request (max_tokens,
         # else DEFAULT_MAX_TOKENS) — one owner, no api-side duplicate.
-        self.engine.add_request(rid, [int(t) for t in prompt],
-                                params=params)
+        self.cluster.add_request(rid, [int(t) for t in prompt],
+                                 params=params, replica_id=replica_id)
         handle = RequestHandle(self, rid, prompt, params)
         self._handles[rid] = handle
         return handle

@@ -80,7 +80,7 @@ from ..models.layers import lm_head, mlp, rmsnorm, rope
 from ..models.moe import moe_decode
 from ..models.transformer import Model
 from .eviction import make_eviction_policy
-from .kvcache import PagedKVPool
+from .kvcache import PageExport, PagedKVPool
 from .prefix_cache import PrefixBackend, PrefixCache
 from .sampling import DEFAULT_MAX_TOKENS, SamplingParams
 
@@ -138,6 +138,30 @@ class Request:
         """Prompt + everything generated so far — what a (re-)prefill must
         ingest (minus the final token, which the next decode step feeds)."""
         return self.tokens + self.generated
+
+
+@dataclasses.dataclass
+class RequestTicket:
+    """The serializable identity of an in-flight request — everything a
+    DIFFERENT engine needs to continue its stream bitwise.
+
+    ``(prompt, params, generated)`` pins the token stream completely: the
+    sampling seed is either explicit in ``params`` or derived from
+    ``request_id`` (engine._run_batch), and the PRNG folds the absolute
+    stream position, so replaying prompt+generated through prefill on any
+    replica resumes the identical sampled stream (the
+    preemption-by-recompute guarantee, applied across engines).  The page
+    table is deliberately NOT here — it is reconstructible (cold path) or
+    rides along separately as a ``PageExport`` (warm path)."""
+
+    request_id: int
+    prompt: List[int]
+    max_new: int
+    params: SamplingParams
+    generated: List[int] = dataclasses.field(default_factory=list)
+    # Set once the owning engine finished the request — a crashed replica's
+    # undrained result is rebuilt from the ticket, never re-decoded.
+    finish_reason: Optional[str] = None
 
 
 class PagedKVBackend:
@@ -513,14 +537,26 @@ class Engine:
         ``max_new``, else ``DEFAULT_MAX_TOKENS``."""
         if request_id in self.requests or request_id in self.finished:
             raise ValueError(f"duplicate request_id {request_id}")
-        if not prompt:
-            raise ValueError("empty prompt")
         if params is None:
             params = SamplingParams()
         if params.max_tokens is not None:
             max_new = params.max_tokens
         elif max_new is None:
             max_new = DEFAULT_MAX_TOKENS
+        self._validate_budget(request_id, prompt, max_new)
+        req = Request(request_id=request_id, tokens=list(prompt),
+                      max_new=max_new, params=params)
+        self.requests[request_id] = req
+        self.wait_queue.append(request_id)
+        self._admit_waiting()
+
+    def _validate_budget(self, request_id: int, prompt: Sequence[int],
+                         max_new: int) -> None:
+        """Reject requests that can NEVER run on this engine, with an error
+        naming the knob (shared by ``add_request`` and the migration import
+        path — a ticket must clear the same bars as a fresh submit)."""
+        if not prompt:
+            raise ValueError("empty prompt")
         P = self.cfg.page_size
         MP = self.cfg.max_pages_per_seq
         total_tokens = len(prompt) - 1 + max_new   # tokens written to KV
@@ -539,11 +575,94 @@ class Engine:
                 f"(+1 to decode) but only {self.usable_hbm_pages} usable "
                 f"HBM pages exist (hbm_pages={self.cfg.hbm_pages} minus the "
                 f"scratch slot); raise ServeConfig.hbm_pages")
-        req = Request(request_id=request_id, tokens=list(prompt),
-                      max_new=max_new, params=params)
-        self.requests[request_id] = req
-        self.wait_queue.append(request_id)
-        self._admit_waiting()
+
+    # ------------------------------------------------- live migration
+    def export_request(self, request_id: int) -> RequestTicket:
+        """Snapshot a live request's serializable identity (see
+        ``RequestTicket``): what another engine needs to continue the
+        stream.  Read-only — pairs with ``remove_request`` once the
+        handoff lands."""
+        req = self.requests.get(request_id)
+        if req is None:
+            raise ValueError(
+                f"cannot export request {request_id}: unknown or finished "
+                f"id (finished results hand off as results, not tickets)")
+        return RequestTicket(
+            request_id=req.request_id, prompt=list(req.tokens),
+            max_new=req.max_new, params=req.params,
+            generated=list(req.generated))
+
+    def remove_request(self, request_id: int) -> Request:
+        """Withdraw a live request wholesale — live migration moved it to
+        another engine.  Frees pages and prunes the live tables WITHOUT
+        marking the request finished (its stream continues elsewhere);
+        stale wait-queue entries self-clean in ``_admit_waiting``."""
+        req = self.requests.pop(request_id, None)
+        if req is None:
+            raise ValueError(
+                f"cannot remove request {request_id}: unknown or finished "
+                f"id")
+        self._release_pages(request_id)
+        self.last_logits.pop(request_id, None)
+        return req
+
+    def import_request(self, ticket: RequestTicket,
+                       kv: Optional["PageExport"] = None) -> Request:
+        """Continue another engine's request on THIS engine.
+
+        Cold path (``kv=None``): rebuild by recompute — the ticket enters
+        the wait queue with its generated tokens preloaded, and admission
+        re-prefills prompt+generated exactly as a preempted request would
+        (bitwise, because one-shot prefill == decode and sampling folds
+        absolute positions).  Warm path (``kv`` from the source pool's
+        ``export_pages``): re-attach any leading blocks this engine's
+        prefix cache already holds (by chain hash — equal token chains mean
+        equal keys mean bitwise-equal pages), import the remaining pages
+        into the local pool, and resume decoding with zero recompute.  A
+        warm import that cannot fit raises ``MemoryError`` with all partial
+        state rolled back, so callers can retry cold."""
+        rid = ticket.request_id
+        if rid in self.requests or rid in self.finished:
+            raise ValueError(f"duplicate request_id {rid}")
+        self._validate_budget(rid, ticket.prompt, ticket.max_new)
+        req = Request(request_id=rid, tokens=list(ticket.prompt),
+                      max_new=ticket.max_new, params=ticket.params,
+                      generated=list(ticket.generated))
+        if kv is None:
+            self.requests[rid] = req
+            self.wait_queue.append(rid)
+            self._admit_waiting()
+            return req
+        context = req.context
+        n_ingest = len(context) - 1
+        self.requests[rid] = req
+        try:
+            chain = []
+            if self.prefix_cache is not None:
+                chain = self.prefix_cache.match(
+                    context[:n_ingest], self.step_count, count=False)
+                hit_ids = [n.page_id for n in chain]
+                missing = [pid for pid in hit_ids
+                           if self.pool.pages[pid].hbm_slot is None]
+                if missing:
+                    self._ensure_free_hbm(len(missing), needed=hit_ids)
+                    self.pool.swap_in_many(missing)
+                for node in chain:
+                    self.pool.attach(rid, node.page_id, self.step_count)
+            self.pool.import_pages(kv.select_from(len(chain)), rid,
+                                   self.step_count)
+        except MemoryError:
+            self._release_pages(rid)
+            self.requests.pop(rid, None)
+            raise
+        req.pos = n_ingest
+        req.state = "active"
+        req.last_scheduled = self.step_count
+        # Adopt the migrated prompt's full-page blocks into the local cache
+        # under their (identical) chain hashes, so sharing survives the
+        # membership change on the destination replica.
+        self._insert_prefix(req, context, n_ingest, chain)
+        return req
 
     # The explicit lifecycle contract (DESIGN.md §7): transitions outside
     # it raise a named ValueError instead of silently mutating queue state.
@@ -1035,6 +1154,8 @@ class Engine:
             "swap_outs": self.pool.swaps_out,
             "bytes_moved": self.pool.bytes_moved,
             "transfer_events": self.pool.transfer_events,
+            "exported_pages": self.pool.exported_pages,
+            "imported_pages": self.pool.imported_pages,
             "hbm_pages_used": self.pool.hbm_used(),
             "live_requests": len(self.requests),
             "waiting_requests": len(self.wait_queue),

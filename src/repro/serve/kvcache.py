@@ -46,6 +46,45 @@ DEVICE_KIND = "device"
 
 
 @dataclasses.dataclass
+class PageExport:
+    """KV pages staged out of one pool for import into another — the warm
+    half of live request migration.  Data is host-side numpy (one batched
+    gather per source tier), bitwise-exact: the importing pool lands the
+    same bytes it would have computed itself.  ``fast`` preserves the
+    source pool's tier placement so the guidance state (where Algorithm 1
+    put each page) survives the membership change when the destination has
+    room."""
+
+    page_ids: List[int]
+    index_in_seq: List[int]
+    tokens_used: List[int]
+    accesses: List[float]
+    fast: List[bool]              # source-tier residency (True = HBM)
+    k: np.ndarray                 # (L, n, P, K, dh)
+    v: np.ndarray
+    n_layers: int
+    shape: Tuple[int, ...]        # (page_size, kv_heads, head_dim)
+
+    def __len__(self) -> int:
+        return len(self.page_ids)
+
+    def select_from(self, first_index: int) -> "PageExport":
+        """Sub-export of the pages at ``index_in_seq >= first_index`` —
+        what remains to import after the destination's prefix cache already
+        covered the leading blocks."""
+        rows = [i for i, idx in enumerate(self.index_in_seq)
+                if idx >= first_index]
+        return PageExport(
+            page_ids=[self.page_ids[i] for i in rows],
+            index_in_seq=[self.index_in_seq[i] for i in rows],
+            tokens_used=[self.tokens_used[i] for i in rows],
+            accesses=[self.accesses[i] for i in rows],
+            fast=[self.fast[i] for i in rows],
+            k=self.k[:, rows], v=self.v[:, rows],
+            n_layers=self.n_layers, shape=self.shape)
+
+
+@dataclasses.dataclass
 class Page:
     page_id: int                 # global logical id
     request_id: int              # ALLOCATOR provenance, not ownership: the
@@ -116,6 +155,10 @@ class PagedKVPool:
         # costs a constant number of events per direction; the per-page
         # path costs 2 per page.  The migration-parity test asserts on it.
         self.transfer_events = 0
+        # Cross-pool live-migration counters — separate from the swap
+        # counters: an export/import is replica handoff, not tier traffic.
+        self.exported_pages = 0
+        self.imported_pages = 0
 
     # ------------------------------------------------------------ alloc
     @property
@@ -376,6 +419,108 @@ class PagedKVPool:
         self.swaps_out += len(outs)
         self.swaps_in += len(ins)
         self.bytes_moved += self.page_bytes * (len(outs) + len(ins))
+
+    # ------------------------------------------------- cross-pool handoff
+    def export_pages(self, page_ids: Sequence[int]) -> PageExport:
+        """Stage pages out of this pool for import into another (warm live
+        migration).  One batched gather per source tier regardless of page
+        count; the source pool is left untouched — the exporter releases
+        its references separately once the handoff lands."""
+        ids = list(dict.fromkeys(page_ids))
+        missing = [pid for pid in ids if pid not in self.pages]
+        if missing:
+            raise ValueError(
+                f"cannot export pages {missing}: unknown or freed ids")
+        pages = [self.pages[pid] for pid in ids]
+        n = len(pages)
+        k = np.zeros((self.n_layers, n) + self.shape, self.k_hbm.dtype)
+        v = np.zeros_like(k)
+        fast_rows = [i for i, p in enumerate(pages) if p.hbm_slot is not None]
+        slow_rows = [i for i, p in enumerate(pages) if p.hbm_slot is None]
+        if fast_rows:
+            staged = self._gather(self.k_hbm, self.v_hbm,
+                                  [pages[i].hbm_slot for i in fast_rows])
+            k[:, fast_rows], v[:, fast_rows] = staged
+        if slow_rows:
+            staged = self._gather(self.k_host, self.v_host,
+                                  [pages[i].host_slot for i in slow_rows])
+            k[:, slow_rows], v[:, slow_rows] = staged
+        self.exported_pages += n
+        return PageExport(
+            page_ids=[p.page_id for p in pages],
+            index_in_seq=[p.index_in_seq for p in pages],
+            tokens_used=[p.tokens_used for p in pages],
+            accesses=[p.accesses for p in pages],
+            fast=[p.hbm_slot is not None for p in pages],
+            k=k, v=v, n_layers=self.n_layers, shape=self.shape)
+
+    def import_pages(self, export: PageExport, request_id: int,
+                     step: int) -> List[Page]:
+        """Land an export into THIS pool as fresh private pages attached to
+        ``request_id``.  Each page keeps its source tier when the matching
+        free list has room (the exporter's guidance placement survives the
+        handoff), overflows to the other tier otherwise, and the whole
+        import raises ``MemoryError`` — before moving any data — when the
+        pools combined cannot hold it (callers fall back to cold
+        recompute).  One batched scatter per destination tier."""
+        if (export.n_layers, tuple(export.shape)) != (self.n_layers,
+                                                      tuple(self.shape)):
+            raise ValueError(
+                f"cannot import pages shaped {export.n_layers}x"
+                f"{tuple(export.shape)} into a pool shaped "
+                f"{self.n_layers}x{tuple(self.shape)}: replica engines "
+                f"must share one model/page geometry")
+        n = len(export)
+        if n == 0:
+            return []
+        if n > len(self.free_hbm) + len(self.free_host):
+            raise MemoryError(
+                f"cannot import {n} pages: only {len(self.free_hbm)} free "
+                f"HBM + {len(self.free_host)} free host slots on the "
+                f"destination pool (hbm_pages={self.hbm_pages}, "
+                f"host_pages={self.host_pages}); cold-migrate instead")
+        room_fast, room_slow = len(self.free_hbm), len(self.free_host)
+        fast_rows: List[int] = []
+        slow_rows: List[int] = []
+        for i in range(n):
+            to_fast = export.fast[i] if (room_fast and room_slow) \
+                else room_fast > 0
+            if to_fast:
+                fast_rows.append(i)
+                room_fast -= 1
+            else:
+                slow_rows.append(i)
+                room_slow -= 1
+        new_pages: List[Optional[Page]] = [None] * n
+        for rows, free, is_fast in ((fast_rows, self.free_hbm, True),
+                                    (slow_rows, self.free_host, False)):
+            if not rows:
+                continue
+            slots = [free.pop() for _ in rows]
+            staged = (export.k[:, rows], export.v[:, rows])
+            if is_fast:
+                self.k_hbm, self.v_hbm = self._scatter(
+                    self.k_hbm, self.v_hbm, slots, staged,
+                    self._dev_sharding)
+            else:
+                self.k_host, self.v_host = self._scatter(
+                    self.k_host, self.v_host, slots, staged,
+                    self._host_sharding)
+            for i, slot in zip(rows, slots):
+                page = Page(
+                    page_id=self._next_id, request_id=request_id,
+                    index_in_seq=export.index_in_seq[i], birth_step=step,
+                    hbm_slot=slot if is_fast else None,
+                    host_slot=None if is_fast else slot,
+                    accesses=export.accesses[i],
+                    tokens_used=export.tokens_used[i], last_used=step)
+                self._next_id += 1
+                self.pages[page.page_id] = page
+                new_pages[i] = page
+        seq = self._seq.setdefault(request_id, [])
+        seq.extend(p for p in new_pages if p is not None)
+        self.imported_pages += n
+        return [p for p in new_pages if p is not None]
 
     def swap_out(self, page_id: int):
         """HBM -> host (single page; the batched path with M=1)."""

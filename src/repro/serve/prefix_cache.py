@@ -113,11 +113,17 @@ class PrefixCache:
         return self.hit_requests / self.lookups if self.lookups else 0.0
 
     # ------------------------------------------------------------- match
-    def match(self, tokens: Sequence[int], step: int) -> List[PrefixNode]:
+    def match(self, tokens: Sequence[int], step: int,
+              count: bool = True) -> List[PrefixNode]:
         """Longest chain of cached full-page blocks covering a prefix of
         ``tokens``.  Charges one hit per matched node (the access profile)
-        and one access on the physical page (the eviction clock)."""
-        self.lookups += 1
+        and one access on the physical page (the eviction clock).
+        ``count=False`` walks the chain without charging anything — the
+        re-attach path of live request migration, which is replica
+        plumbing, not application access, and must not skew the guidance
+        profile or the hit-rate telemetry."""
+        if count:
+            self.lookups += 1
         P = self.page_size
         chain: List[PrefixNode] = []
         level = self.roots
@@ -127,6 +133,8 @@ class PrefixCache:
                 break
             chain.append(node)
             level = node.children
+        if not count:
+            return chain
         for node in chain:
             node.hits += 1.0
             node.last_hit_step = step

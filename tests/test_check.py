@@ -36,6 +36,7 @@ RULE_CASES = [
     ("DET01", "det01", [12, 13, 19]),
     ("DET02", "det02", [8, 12, 17, 24]),
     ("EXC01", "exc01", [7, 14]),
+    ("FT01", os.path.join("serve", "ft01"), [11, 14, 17]),
     ("KRN01", "krn01", [10, 17, 32]),
     ("KV01", "kv01", [11, 16, 22]),
     ("SPMD01", "spmd01", [10, 19]),

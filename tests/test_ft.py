@@ -1,0 +1,135 @@
+"""Unit tests for the ``ft`` package: heartbeat failure detection with an
+injected clock, elastic membership, EWMA straggler scoring, and
+``plan_rescale`` edge cases (n_alive=1, non-power-of-two survivors,
+model-axis shrink, lead axes)."""
+
+import pytest
+
+from repro.ft import HeartbeatMonitor, plan_rescale
+
+
+# -------------------------------------------------------- missed beats
+def test_missed_beat_detection_with_injected_clock():
+    t = [0.0]
+    mon = HeartbeatMonitor(3, timeout_s=5.0, clock=lambda: t[0])
+    t[0] = 3.0
+    mon.beat(0)
+    mon.beat(1)
+    t[0] = 6.0                       # node 2 silent since t=0: 6 > 5
+    assert mon.check_failures() == [2]
+    assert mon.dead == {2}
+    assert mon.alive == [0, 1]
+    # Already-dead nodes are not re-reported, and their beats are ignored.
+    assert mon.check_failures() == []
+    mon.beat(2)
+    t[0] = 100.0
+    assert mon.check_failures() == [0, 1]
+
+
+def test_beat_resets_the_timeout_window():
+    t = [0.0]
+    mon = HeartbeatMonitor(1, timeout_s=2.0, clock=lambda: t[0])
+    for tick in range(1, 10):        # beat every 1s: never times out
+        t[0] = float(tick)
+        assert mon.check_failures() == []
+        mon.beat(0)
+    t[0] += 2.5                      # then go silent past the timeout
+    assert mon.check_failures() == [0]
+
+
+# --------------------------------------------------- elastic membership
+def test_add_node_rejects_alive_duplicate_and_revives_dead():
+    t = [0.0]
+    mon = HeartbeatMonitor(2, timeout_s=1.0, clock=lambda: t[0])
+    with pytest.raises(ValueError, match="already monitored and alive"):
+        mon.add_node(1)
+    t[0] = 5.0
+    assert sorted(mon.check_failures()) == [0, 1]
+    mon.add_node(0)                  # re-admitting a dead node revives it
+    assert mon.alive == [0]
+    assert mon.nodes[0].last_beat == 5.0   # beat clock restarts at now
+    mon.add_node(7)                  # brand-new ids join alive
+    assert 7 in mon.alive
+
+
+def test_remove_node_forgets_and_tolerates_unknown_ids():
+    t = [0.0]
+    mon = HeartbeatMonitor(2, timeout_s=1.0, clock=lambda: t[0])
+    t[0] = 5.0
+    assert mon.check_failures() == [0, 1]
+    mon.remove_node(0)
+    assert 0 not in mon.nodes and 0 not in mon.dead
+    mon.remove_node(99)              # unknown id: no-op, no raise
+    # A removed node no longer appears in failure sweeps.
+    t[0] = 50.0
+    assert mon.check_failures() == []
+
+
+# ------------------------------------------------------ EWMA stragglers
+def test_ewma_blend_first_sample_seeds_then_blends():
+    t = [0.0]
+    mon = HeartbeatMonitor(1, clock=lambda: t[0], ewma=0.2)
+    mon.beat(0, step_time_s=1.0)     # first sample seeds the EWMA
+    assert mon.nodes[0].step_time_ewma == pytest.approx(1.0)
+    mon.beat(0, step_time_s=2.0)     # then blends: 0.8*1.0 + 0.2*2.0
+    assert mon.nodes[0].step_time_ewma == pytest.approx(1.2)
+    mon.beat(0)                      # beat without timing leaves it alone
+    assert mon.nodes[0].step_time_ewma == pytest.approx(1.2)
+
+
+def test_stragglers_need_three_alive_samples():
+    t = [0.0]
+    mon = HeartbeatMonitor(4, clock=lambda: t[0], straggler_factor=1.8)
+    mon.beat(0, step_time_s=1.0)
+    mon.beat(1, step_time_s=3.0)     # 2 samples: never enough signal
+    assert mon.stragglers() == []
+    mon.beat(2, step_time_s=1.0)     # 3rd sample: median 1.0, 3.0 > 1.8x
+    assert mon.stragglers() == [1]
+    mon.dead.add(1)                  # dead nodes drop out of the pool
+    assert mon.stragglers() == []    # back under three alive samples
+
+
+def test_plan_replacement_consumes_spares_fifo():
+    mon = HeartbeatMonitor(4, clock=lambda: 0.0)
+    mon.add_spare(10)
+    mon.add_spare(11)
+    assert mon.plan_replacement([2, 3, 0]) == {2: 10, 3: 11, 0: None}
+    assert mon.spares == []
+
+
+# -------------------------------------------------------- plan_rescale
+def test_plan_rescale_single_survivor():
+    plan = plan_rescale(1, (2, 4))
+    assert plan.new_shape == (1, 1)
+    assert plan.new_device_count == 1
+    # Global batch preserved: data axis 2 -> 1 doubles accumulation.
+    assert plan.accum_factor == 2
+
+
+def test_plan_rescale_non_power_of_two_survivors_keep_model_axis():
+    plan = plan_rescale(6, (2, 4))   # one full model group fits in 6
+    assert plan.new_shape == (1, 4)
+    assert plan.accum_factor == 2
+
+
+def test_plan_rescale_model_axis_shrink():
+    plan = plan_rescale(3, (2, 4))   # <1 model group: model -> largest p2
+    assert plan.new_shape == (1, 2)
+    assert plan.accum_factor == 2
+
+
+def test_plan_rescale_identity_when_nothing_lost():
+    plan = plan_rescale(8, (2, 4))
+    assert plan.new_shape == (2, 4)
+    assert plan.accum_factor == 1
+
+
+def test_plan_rescale_with_lead_axes():
+    # (replica=2, data=2, model=4): lose half -> data axis absorbs it.
+    plan = plan_rescale(8, (2, 2, 4), axis_names=("replica", "data", "model"))
+    assert plan.new_shape == (2, 1, 4)
+    assert plan.accum_factor == 2
+    # Below one model group even the lead axes collapse.
+    plan = plan_rescale(2, (2, 2, 4), axis_names=("replica", "data", "model"))
+    assert plan.new_shape == (1, 1, 2)
+    assert plan.accum_factor == 2
