@@ -4,13 +4,18 @@ HBM page budget, a prefill-throughput case comparing one-shot paged prefill
 (a single jitted dispatch per prompt) against the chunked per-token oracle,
 a generation-API case measuring in-dispatch sampling overhead (sampled
 vs greedy decode tokens/s) plus streaming time-to-first-delta through
-``LLM.submit``, and a prefix-cache sweep measuring TTFT on a
-shared-system-prompt workload as the cached share of the prompt rises.
+``LLM.submit``, a prefix-cache sweep measuring TTFT on a
+shared-system-prompt workload as the cached share of the prompt rises,
+kill-a-replica chaos, and an SLO replay case: a deterministic two-tenant
+bursty trace (``serve.workload``) replayed with one-shot vs interleaved
+chunked prefill, scored as p50/p99 TTFT/TPOT and goodput-under-SLO on the
+modeled step clock with a bitwise-vs-unloaded stream check.
 ``derived`` = page-swap bytes moved (lower is better) for swap rows,
 modeled step time (PCIe swaps + decode) for time rows, prompt tokens/s for
 prefill-throughput rows, seconds for TTFT rows, decode tokens/s for
-sampled-decode rows, counts for finish-reason rows, and hit-rate /
-saved-token figures for the prefix sweep."""
+sampled-decode rows, counts for finish-reason rows, hit-rate /
+saved-token figures for the prefix sweep, and modeled-ms latencies /
+goodput fractions / a 0-or-1 bitwise flag for the SLO replay rows."""
 
 from __future__ import annotations
 
@@ -24,7 +29,16 @@ from repro.configs import get_smoke
 from repro.core import TPU_V5E
 from repro.launch.analysis import serving_summary
 from repro.models import build_model
-from repro.serve import LLM, SamplingParams, ServeConfig
+from repro.serve import (
+    LLM,
+    SLO,
+    SamplingParams,
+    ServeConfig,
+    TenantSpec,
+    TraceReplayer,
+    WorkloadConfig,
+    synthesize,
+)
 
 from .common import emit
 
@@ -248,6 +262,60 @@ def cluster_chaos(n_replicas: int = 3, n_requests: int = 9,
     return dropped, p99, stats
 
 
+def _slo_trace(quick: bool):
+    """The smoke replay scenario: a decode-heavy 'chat' tenant (steady
+    Poisson arrivals, short sampled completions) sharing the engine with a
+    'batch' tenant whose bursts carry long prompts (the 32k-prefill
+    problem scaled to the CPU smoke model).  Fully deterministic — one
+    workload seed pins every arrival, length, and sampled stream."""
+    long_prompt = 128 if quick else 256
+    tenants = (
+        TenantSpec(name="chat", arrival="poisson", rate=0.3,
+                   prompt_mix=((6, 1.0),), output_mix=((16, 1.0),),
+                   temperature=0.7),
+        TenantSpec(name="batch", arrival="bursty", rate=0.05,
+                   burst_factor=10.0, burst_period=16, burst_duty=0.25,
+                   prompt_mix=((long_prompt, 1.0),),
+                   output_mix=((2, 1.0),)),
+    )
+    trace = synthesize(WorkloadConfig(
+        tenants=tenants, horizon_steps=32 if quick else 48, vocab=256,
+        seed=8))
+    return trace, long_prompt
+
+
+def _slo_serve_cfg(long_prompt: int, chunk_tokens: int) -> ServeConfig:
+    return ServeConfig(
+        max_batch=6, page_size=8, hbm_pages=160, host_pages=64,
+        policy="gdt", interval_steps=16,
+        max_pages_per_seq=long_prompt // 8 + 4,
+        prefill_chunk_tokens=chunk_tokens)
+
+
+def _solo_reference(trace, long_prompt: int):
+    """Unloaded per-request streams: each trace request runs ALONE (one
+    reusable LLM, sequential submits) — sampling folds the absolute stream
+    position, so any loaded schedule must reproduce these bitwise."""
+    _, model, params = _smoke_model()
+    llm = LLM(model, params, _slo_serve_cfg(long_prompt, 0))
+    return {tr.request_id:
+            llm.submit(list(tr.prompt), tr.sampling_params(),
+                       request_id=tr.request_id).result().token_ids
+            for tr in trace.requests}
+
+
+def slo_replay(trace, long_prompt: int, chunk_tokens: int):
+    """Replay the two-tenant trace at one prefill-interleaving setting and
+    score it against the SLO on the modeled step clock (where a one-shot
+    long prefill is VISIBLE as one 25-50x step, stalling every concurrent
+    decode's inter-token gap)."""
+    _, model, params = _smoke_model()
+    llm = LLM(model, params, _slo_serve_cfg(long_prompt, chunk_tokens))
+    slo = SLO(ttft_ms=100.0, tpot_ms=25.0)
+    report = TraceReplayer(llm, trace, slo=slo).run(max_steps=2048)
+    return report, slo
+
+
 def run(quick: bool = False):
     rows = []
     pcie = TPU_V5E.slow.read_bw_GBps * 1e9
@@ -324,6 +392,34 @@ def run(quick: bool = False):
                  cstats["cluster_migrations_cold"]))
     rows.append(("serve/chaos/requests_lost", 0.0,
                  cstats["cluster_requests_lost"]))
+    # SLO replay: bursty two-tenant trace, FIFO one-shot vs FIFO with
+    # chunked-prefill interleaving.  ``derived`` = modeled milliseconds
+    # for latency rows, fractions for goodput rows, and a 0/1 flag for the
+    # bitwise-vs-unloaded check; ``us_per_call`` = the replay's total
+    # modeled time.  The headline is chat_p99_tpot_ms: the decode-heavy
+    # tenant's worst inter-token stall under the batch tenant's
+    # long-prefill bursts must IMPROVE when interleaving is on, while
+    # every sampled stream stays bitwise-equal to its unloaded solo run.
+    trace, long_prompt = _slo_trace(quick)
+    ref_streams = _solo_reference(trace, long_prompt)
+    for label, chunk in (("fifo_oneshot", 0), ("fifo_chunked", 16)):
+        report, slo = slo_replay(trace, long_prompt, chunk)
+        s_all = report.summary(slo=slo)
+        s_chat = report.summary(tenant="chat", slo=slo)
+        us = report.modeled_ms * 1e3
+        tag = f"serve/slo_replay/{label}"
+        rows.append((f"{tag}/p50_ttft_ms", us, s_all["p50_ttft_ms"]))
+        rows.append((f"{tag}/p99_ttft_ms", us, s_all["p99_ttft_ms"]))
+        rows.append((f"{tag}/p50_tpot_ms", us, s_all["p50_tpot_ms"]))
+        rows.append((f"{tag}/p99_tpot_ms", us, s_all["p99_tpot_ms"]))
+        rows.append((f"{tag}/chat_p99_tpot_ms", us,
+                     s_chat["p99_tpot_ms"]))
+        rows.append((f"{tag}/goodput_slo", us, s_all["goodput_slo"]))
+        rows.append((f"{tag}/chat_goodput_slo", us,
+                     s_chat["goodput_slo"]))
+        rows.append((f"{tag}/streams_bitwise_equal", 0.0, float(
+            all(report.token_ids.get(rid) == toks
+                for rid, toks in ref_streams.items()))))
     return emit(rows)
 
 

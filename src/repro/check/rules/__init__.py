@@ -8,5 +8,6 @@ from . import (  # noqa: F401
     ft01,
     krn01,
     kv01,
+    sched01,
     spmd01,
 )

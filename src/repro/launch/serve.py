@@ -36,6 +36,13 @@ def main():
     p.add_argument("--prompt-len", type=int, default=12)
     p.add_argument("--max-new", type=int, default=32)
     p.add_argument("--policy", choices=["gdt", "lru", "fifo"], default="gdt")
+    p.add_argument("--scheduler", choices=["fifo", "priority", "drr"],
+                   default="fifo",
+                   help="scheduling policy: admission order, preemption "
+                        "victims, and the per-step prefill/decode split")
+    p.add_argument("--prefill-chunk-tokens", type=int, default=0,
+                   help="interleave long prompt ingests at this many "
+                        "tokens per engine step (0 = one-shot prefill)")
     p.add_argument("--page-size", type=int, default=16)
     p.add_argument("--hbm-pages", type=int, default=24)
     p.add_argument("--host-pages", type=int, default=256)
@@ -75,7 +82,9 @@ def main():
     llm = LLM(model, params, ServeConfig(
         max_batch=args.max_batch, page_size=args.page_size,
         hbm_pages=args.hbm_pages, host_pages=args.host_pages,
-        policy=args.policy, enable_prefix_cache=args.prefix_cache,
+        policy=args.policy, scheduler=args.scheduler,
+        prefill_chunk_tokens=args.prefill_chunk_tokens,
+        enable_prefix_cache=args.prefix_cache,
         min_prefix_pages=args.min_prefix_pages), replicas=args.replicas)
 
     rng = np.random.default_rng(0)
@@ -90,7 +99,10 @@ def main():
             temperature=args.temperature, top_k=args.top_k,
             top_p=args.top_p, seed=args.seed + rid,
             max_tokens=args.max_new), request_id=rid)
-        llm.pause(rid)
+        # Chunked submits park in 'prefilling' (no schedulable position to
+        # pause yet); they join the pause/resume dance once active.
+        if llm.engine.requests[rid].state == "active":
+            llm.pause(rid)
 
     hot = list(range(min(2, args.sessions)))
     t0 = time.time()

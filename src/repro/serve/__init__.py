@@ -10,13 +10,36 @@ from .eviction import (
 from .kvcache import Page, PageExport, PagedKVPool
 from .prefix_cache import PrefixBackend, PrefixCache, PrefixNode, block_hash
 from .sampling import SamplingParams
+from .scheduler import (
+    SCHEDULER_POLICIES,
+    DrrPolicy,
+    FifoPolicy,
+    PriorityPolicy,
+    SchedulerPolicy,
+    StepBudget,
+    make_scheduler_policy,
+    register_scheduler_policy,
+)
+from .workload import (
+    SLO,
+    ReplayReport,
+    StepCostModel,
+    TenantSpec,
+    Trace,
+    TraceReplayer,
+    TraceRequest,
+    WorkloadConfig,
+    synthesize,
+)
 
 __all__ = [
     "DEFAULT_MAX_TOKENS",
     "EVICTION_POLICIES",
+    "DrrPolicy",
     "Engine",
     "EngineReplica",
     "EvictionPolicy",
+    "FifoPolicy",
     "LLM",
     "Page",
     "PageExport",
@@ -25,15 +48,30 @@ __all__ = [
     "PrefixBackend",
     "PrefixCache",
     "PrefixNode",
+    "PriorityPolicy",
+    "ReplayReport",
     "ReplicaLostError",
     "Request",
     "RequestHandle",
     "RequestOutput",
     "RequestTicket",
     "Router",
+    "SCHEDULER_POLICIES",
+    "SLO",
     "SamplingParams",
+    "SchedulerPolicy",
     "ServeConfig",
+    "StepBudget",
+    "StepCostModel",
+    "TenantSpec",
+    "Trace",
+    "TraceReplayer",
+    "TraceRequest",
+    "WorkloadConfig",
     "block_hash",
     "make_eviction_policy",
+    "make_scheduler_policy",
     "register_eviction_policy",
+    "register_scheduler_policy",
+    "synthesize",
 ]

@@ -14,8 +14,10 @@ Two entry points over one shared engine:
 * ``submit(prompt, params) -> RequestHandle`` — streaming: the handle is an
   iterable of ``(token, finish_reason)`` deltas produced as the engine
   steps; ``finish_reason`` is ``None`` until the final delta (``stop`` /
-  ``length`` / ``truncated``).  Iterating a handle drives the shared
-  engine, so concurrent handles make progress together.
+  ``length`` / ``truncated`` / ``cancelled``).  Iterating a handle drives
+  the shared engine, so concurrent handles make progress together.
+  ``LLM.cancel(request_id)`` withdraws a live request; its handle ends
+  with a ``cancelled`` delta instead of dangling.
 
 Determinism: with ``temperature=0`` the output is bitwise-equal to greedy
 decode; with a seeded ``temperature > 0`` the stream is a pure function of
@@ -47,7 +49,7 @@ class RequestOutput:
     request_id: int
     prompt_token_ids: List[int]
     token_ids: List[int]
-    finish_reason: str            # stop | length | truncated
+    finish_reason: str            # stop | length | truncated | cancelled
     params: SamplingParams
 
 
@@ -281,6 +283,15 @@ class LLM:
 
     def resume(self, request_id: int) -> None:
         self.engine.resume(request_id)
+
+    def cancel(self, request_id: int) -> None:
+        """Withdraw a live request.  Its streaming handle terminates with
+        a final ``(token-or-None, "cancelled")`` delta (tokens generated
+        before the cancel are still delivered); ``result()`` returns them
+        with ``finish_reason="cancelled"``.  Finished or unknown ids raise
+        the engine's named ``ValueError``."""
+        self.engine.cancel(request_id)
+        self._absorb_finished()
 
     def is_live(self, request_id: int) -> bool:
         """True while the request is still inside the engine (any state

@@ -7,10 +7,13 @@ surface an ``Engine`` does (``add_request`` / ``step`` / ``pause`` /
 so ``serve.api.LLM`` routes instead of owning a single engine and every
 existing driver keeps working at N=1.
 
-* **Dispatch** is least-loaded: a new request goes to the alive replica
-  with the fewest waiting requests, then fewest allocated pages, ties
-  broken by replica id — deterministic, so a replayed workload routes
-  identically.
+* **Dispatch** is least-loaded and policy-aware: a new request goes to
+  the alive replica with the smallest ``Engine.queue_delay_estimate()``
+  (un-ingested prompt-token backlog over per-step prefill capacity, plus
+  decode occupancy — so a replica stuffed with queued 32k prompts repels
+  new work even while its pages-in-use still look modest), then fewest
+  allocated pages, ties broken by replica id — deterministic, so a
+  replayed workload routes identically.
 
 * **Lifecycle** runs through the seed's ``ft.HeartbeatMonitor`` with an
   injected step-tick clock (``router.step`` is the heartbeat cadence):
@@ -74,9 +77,13 @@ class EngineReplica:
     def reachable(self) -> bool:
         return self.state in ("alive", "draining")
 
-    def load(self) -> Tuple[int, int]:
-        """(queue depth, pages in use) — the least-loaded dispatch key."""
-        return (len(self.engine.wait_queue), len(self.engine.pool.pages))
+    def load(self) -> Tuple[float, int]:
+        """(queue-delay estimate, pages in use) — the least-loaded
+        dispatch key.  The delay estimate (in engine steps) weighs queued
+        prompt SIZE and decode occupancy, not just how many requests are
+        waiting."""
+        return (self.engine.queue_delay_estimate(),
+                len(self.engine.pool.pages))
 
     def __repr__(self) -> str:
         return (f"EngineReplica(id={self.replica_id}, state={self.state}, "
@@ -344,6 +351,11 @@ class Router:
                 generated=list(ticket.generated))
             self.tickets[rid] = ticket
         pages = src.engine.pool.request_pages(rid)
+        if src.engine.requests[rid].state == "prefilling":
+            # A mid-ingest request's pages are only written up to ``pos``;
+            # the warm path would resume decode as if the whole prompt were
+            # in KV.  Cold recompute re-prefills it correctly (and bitwise).
+            pages = []
         target = self._pick()
         if pages:
             export = src.engine.pool.export_pages(
@@ -429,6 +441,17 @@ class Router:
     def resume(self, request_id: int) -> None:
         self._owner_or_raise(request_id, "resume").engine.resume(request_id)
 
+    def cancel(self, request_id: int) -> None:
+        """Withdraw a live request on its owning replica.  The ticket is
+        stamped immediately, so a crash between cancel and drain still
+        resolves to a ``cancelled`` result rather than a recompute."""
+        rep = self._owner_or_raise(request_id, "cancel")
+        req = rep.engine.cancel(request_id)
+        t = self.tickets.get(request_id)
+        if t is not None:
+            t.finish_reason = req.finish_reason
+            t.generated = list(req.generated)
+
     def stats(self) -> Dict[str, float]:
         """Cluster-aggregate engine counters (summed over reachable
         replicas, with the prefix hit rate recomputed from the summed
@@ -442,6 +465,13 @@ class Router:
             # int counters stay ints (pre-cluster consumers %d-format them).
             for k, v in rep.engine.stats().items():
                 agg[k] = agg.get(k, 0) + v
+        # Per-replica means do not sum; report the replica average (the
+        # same ``mean_`` convention serving_summary applies).
+        n_reachable = sum(1 for r in self.replicas if r.reachable)
+        if n_reachable > 1:
+            for k in agg:
+                if "mean_" in k:
+                    agg[k] = agg[k] / n_reachable
         if agg.get("prefix_lookups"):
             agg["prefix_hit_rate"] = (agg["prefix_hit_requests"]
                                       / agg["prefix_lookups"])

@@ -4,13 +4,20 @@ The engine serves dense/MoE decoder models from a paged two-tier KV cache
 (serve/kvcache.py).  Each *request* is an allocation site; its pages are the
 chunks.  The request lifecycle is explicit:
 
-    waiting --admit--> active <--pause/resume--> paused --preempt--> waiting
-                          \\------------------ finish ------------> finished
+    waiting --admit--> [prefilling -->] active <--pause/resume--> paused
+        ^                                 |                         |
+        +------------- preempt ----------/ <----------------------/
+    (any live state) ------------------- finish/cancel ---------> finished
 
-* **Admission** is FIFO from a wait queue: a request is admitted when its
-  prompt's pages fit the pool's free logical capacity (no raw ``IndexError``
-  / ``MemoryError`` escapes for work that merely has to wait).  Requests
-  that can *never* run — prompt + generation budget past
+* **Admission** order, preemption victims, decode packing, and the
+  per-step prefill/decode budget split are POLICY decisions, delegated to
+  a ``SchedulerPolicy`` (serve/scheduler.py; ``ServeConfig.scheduler``
+  picks ``fifo`` — bitwise the pre-policy engine — ``priority``, or
+  ``drr`` per-tenant fairness).  A request is admitted when its prompt's
+  pages fit the pool's free logical capacity (no raw ``IndexError`` /
+  ``MemoryError`` escapes for work that merely has to wait); admission
+  never skips past a request that does not fit.  Requests that can
+  *never* run — prompt + generation budget past
   ``max_pages_per_seq * page_size``, or a prompt bigger than the usable HBM
   pool — are rejected at ``add_request`` with an error naming the knob.
 * **Prefill** is one-shot: a single jitted dispatch writes the whole
@@ -18,6 +25,13 @@ chunks.  The request lifecycle is explicit:
   causal lengths (``kernels.ops.paged_prefill``).  The chunked path
   (``prefill="chunked"``: step the prompt through decode one token at a
   time) survives as the bitwise-equality oracle.  With
+  ``prefill_chunk_tokens > 0`` long prompts are instead INTERLEAVED: an
+  admitted request enters a ``prefilling`` state and each engine step
+  ingests at most that many prompt tokens (one bucketed dispatch per
+  chunk, at the chunk's absolute start position) alongside the decode
+  batch, so a 32k-token prompt cannot monopolize the step loop — and
+  because one-shot == chunked == decode bitwise, interleaving changes
+  WHEN tokens appear, never WHICH tokens.  With
   ``enable_prefix_cache`` the cross-request radix prefix cache
   (serve/prefix_cache.py) is consulted FIRST: matched full-page blocks are
   attached by reference (refcounted, copy-on-write) and the dispatch runs
@@ -25,10 +39,11 @@ chunks.  The request lifecycle is explicit:
   skips prefill entirely — with cached-vs-uncached logits bitwise-equal
   (K/V depend only on tokens and positions, and suffix == whole-prompt
   prefill by the one-shot == chunked == decode equality).
-* **Scheduling** each step packs up to ``max_batch`` active requests by
-  last-scheduled age under two budgets — usable HBM slots and free logical
-  pages — so a batch can always be made resident without evicting its own
-  members; requests that do not fit are starved this step, not crashed.
+* **Scheduling** each step packs up to ``max_batch`` active requests in
+  the policy's decode order under two budgets — usable HBM slots and free
+  logical pages — so a batch can always be made resident without evicting
+  its own members; requests that do not fit are starved this step, not
+  crashed.
 * **Preemption**: paused requests can lose their pages entirely (preempt by
   recompute — deterministic re-prefill of prompt+generated on resume makes
   this lossless, *because* one-shot prefill == decode bitwise) when the
@@ -41,7 +56,8 @@ chunks.  The request lifecycle is explicit:
   ``temperature=0`` rows are bitwise-equal to greedy argmax.
 * **Finish** carries a reason — ``stop`` (a sampled token hit
   ``SamplingParams.stop_token_ids``), ``length`` (``max_new`` /
-  ``max_tokens`` exhausted) or ``truncated`` (capacity) — frees pages,
+  ``max_tokens`` exhausted), ``truncated`` (capacity) or ``cancelled``
+  (``Engine.cancel`` withdrew a live request) — frees pages,
   prunes the request from ``engine.requests`` and its pages from the
   eviction policy's ``last_recs`` view; results move to
   ``engine.finished`` (drain with ``pop_finished``; per-reason totals in
@@ -83,6 +99,7 @@ from .eviction import make_eviction_policy
 from .kvcache import PageExport, PagedKVPool
 from .prefix_cache import PrefixBackend, PrefixCache
 from .sampling import DEFAULT_MAX_TOKENS, SamplingParams
+from .scheduler import make_scheduler_policy
 
 F32 = jnp.float32
 
@@ -105,6 +122,16 @@ class ServeConfig:
     # Prompt ingestion: "one_shot" = single jitted dispatch per prompt;
     # "chunked" = step prompt tokens through decode (the bitwise oracle).
     prefill: str = "one_shot"
+    # Scheduling policy (serve/scheduler.py registry): "fifo" is bitwise
+    # the pre-policy engine; "priority" = strict classes + EDF; "drr" =
+    # deficit-round-robin per-tenant fairness.
+    scheduler: str = "fifo"
+    # Chunked-prefill interleaving budget: > 0 caps how many prompt tokens
+    # may ingest per engine step (one_shot mode only — an admitted request
+    # sits in ``prefilling`` state and co-schedules with decode).  0 keeps
+    # eager whole-suffix prefill at admission (bitwise the pre-policy
+    # engine).
+    prefill_chunk_tokens: int = 0
     # Cross-request radix prefix cache (serve/prefix_cache.py): requests
     # whose prompts start with the same full-page token blocks share those
     # pages by reference and prefill only the uncovered suffix.  Off by
@@ -127,11 +154,16 @@ class Request:
     max_new: int
     params: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     generated: List[int] = dataclasses.field(default_factory=list)
-    state: str = "waiting"   # waiting | active | paused | preempted | finished
+    # waiting | prefilling | active | paused | preempted | finished
+    state: str = "waiting"
     pos: int = 0                   # tokens written to KV so far
     last_scheduled: int = 0
+    # Step this request (re-)entered the wait queue — admission-wait
+    # accounting and the deadline base for SLO-aware policies.
+    queued_step: int = 0
     truncated: bool = False        # finished early for capacity, not EOS
-    finish_reason: Optional[str] = None   # stop | length | truncated
+    # stop | length | truncated | cancelled
+    finish_reason: Optional[str] = None
 
     @property
     def context(self) -> List[int]:
@@ -279,6 +311,10 @@ class Engine:
             raise ValueError(
                 f"ServeConfig.prefill must be 'one_shot' or 'chunked', "
                 f"got {cfg.prefill!r}")
+        if cfg.prefill_chunk_tokens < 0:
+            raise ValueError(
+                f"ServeConfig.prefill_chunk_tokens must be >= 0, got "
+                f"{cfg.prefill_chunk_tokens}")
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -294,6 +330,14 @@ class Engine:
         self.wait_queue: Deque[int] = deque()
         self.step_count = 0
         self.eviction = make_eviction_policy(cfg.policy)
+        # Pluggable scheduling decisions (admission / preemption / decode
+        # order / per-step budget split).  A FRESH instance per engine —
+        # stateful policies (DRR deficits) must not bleed across replicas.
+        self.scheduler = make_scheduler_policy(cfg.scheduler)
+        # Prefix-cache chains matched at admission for requests still in
+        # ``prefilling`` state — insertion into the cache happens only once
+        # the whole prompt is ingested.
+        self._pending_chains: Dict[int, list] = {}
         # Reserve one HBM slot as the write target for inactive batch rows,
         # so the batched scatter never collides with a real page.
         self.scratch_slot = self.pool.free_hbm.pop(0)
@@ -345,7 +389,11 @@ class Engine:
         self.swap_in_events = 0
         self.prefill_dispatches = 0    # jitted dispatches spent on prefill
         self.prefill_tokens = 0        # prompt tokens ingested
+        self.prefill_chunks = 0        # interleaved chunk dispatches
         self.admissions = 0
+        # Sum over admissions of (admit step - queued step); the mean rides
+        # in stats() as ``mean_admission_wait_steps``.
+        self.admission_wait_steps = 0
         self.preemptions = 0           # paused requests evicted wholesale
         self.starved_steps = 0         # request-steps skipped for capacity
         self.truncations = 0           # requests finished early for capacity
@@ -353,7 +401,7 @@ class Engine:
         # Per-finish_reason totals (monotonic — surviving pop_finished
         # drains), reported through stats() and serving_summary.
         self.finish_counts: Dict[str, int] = {
-            "stop": 0, "length": 0, "truncated": 0}
+            "stop": 0, "length": 0, "truncated": 0, "cancelled": 0}
 
     # ------------------------------------------------- telemetry shims
     @property
@@ -382,6 +430,29 @@ class Engine:
         """Unallocated pages across both tiers — what admission/allocation
         budgets against."""
         return len(self.pool.free_hbm) + len(self.pool.free_host)
+
+    def queue_delay_estimate(self) -> float:
+        """Deterministic estimate (in engine steps) of how long a NEW
+        request would wait before decoding: the un-ingested prompt-token
+        backlog (waiting + mid-prefill) over the per-step prefill capacity,
+        plus current decode occupancy.  The Router's dispatch key — a
+        replica stuffed with queued 32k prompts now repels new work even
+        while its pages-in-use still look modest."""
+        backlog = 0
+        n_active = 0
+        for r in self.requests.values():
+            if r.state == "waiting":
+                backlog += max(len(r.context) - 1, 1)
+            elif r.state == "prefilling":
+                backlog += max(len(r.context) - 1 - r.pos, 0)
+            elif r.state == "active":
+                n_active += 1
+        per_step = self.scheduler.step_budget(self).prefill_tokens
+        if per_step <= 0:
+            # Eager prefill ingests a whole prompt per admission; the
+            # page-sized batch capacity is the natural per-step unit.
+            per_step = self.cfg.page_size * self.cfg.max_batch
+        return backlog / per_step + n_active / self.cfg.max_batch
 
     # ================================================== shared layer body
     def _layer_body(self, lp, x, kp, vp, *, positions, write_slot,
@@ -545,7 +616,8 @@ class Engine:
             max_new = DEFAULT_MAX_TOKENS
         self._validate_budget(request_id, prompt, max_new)
         req = Request(request_id=request_id, tokens=list(prompt),
-                      max_new=max_new, params=params)
+                      max_new=max_new, params=params,
+                      queued_step=self.step_count)
         self.requests[request_id] = req
         self.wait_queue.append(request_id)
         self._admit_waiting()
@@ -603,6 +675,7 @@ class Engine:
                 f"cannot remove request {request_id}: unknown or finished "
                 f"id")
         self._release_pages(request_id)
+        self._pending_chains.pop(request_id, None)
         self.last_logits.pop(request_id, None)
         return req
 
@@ -627,7 +700,8 @@ class Engine:
         self._validate_budget(rid, ticket.prompt, ticket.max_new)
         req = Request(request_id=rid, tokens=list(ticket.prompt),
                       max_new=ticket.max_new, params=ticket.params,
-                      generated=list(ticket.generated))
+                      generated=list(ticket.generated),
+                      queued_step=self.step_count)
         if kv is None:
             self.requests[rid] = req
             self.wait_queue.append(rid)
@@ -704,8 +778,20 @@ class Engine:
             # one-shot prefill == decode bitwise, and sampling folds the
             # absolute stream position, so replay resamples identically).
             req.state = "waiting"
+            req.queued_step = self.step_count
             self.wait_queue.append(request_id)
             self._admit_waiting()
+
+    def cancel(self, request_id: int) -> Request:
+        """Withdraw a live request in ANY state (waiting, prefilling,
+        active, paused, preempted): pages free immediately, the stale
+        wait-queue entry self-cleans at the next admission sweep, and the
+        result parks in ``finished`` with ``finish_reason="cancelled"``
+        (tokens generated so far are kept).  Finished or unknown ids raise
+        the usual named ``ValueError``."""
+        req = self._lookup(request_id, "cancel")
+        self._finish(req, reason="cancelled")
+        return req
 
     def pop_finished(self, request_id: Optional[int] = None):
         """Drain finished requests (all, or one) so long-lived engines do
@@ -717,15 +803,21 @@ class Engine:
 
     # ------------------------------------------------------- admission
     def _admit_waiting(self):
-        """FIFO admission: admit the queue head while its (re-)prefill
-        pages fit the free logical capacity, preempting paused requests'
-        pages when that unblocks the head."""
+        """Policy-ordered admission: admit the policy's head while its
+        (re-)prefill pages fit the free logical capacity, preempting
+        paused requests' pages when that unblocks the head.  Admission
+        never skips past a head that does not fit (bounded head-of-line
+        blocking is what keeps every policy starvation-free)."""
         P = self.cfg.page_size
         while self.wait_queue:
-            req = self.requests.get(self.wait_queue[0])
-            if req is None or req.state != "waiting":   # cancelled/stale
+            head = self.requests.get(self.wait_queue[0])
+            if head is None or head.state != "waiting":  # cancelled/stale
                 self.wait_queue.popleft()
                 continue
+            waiting = [r for r in (self.requests.get(rid)
+                                   for rid in self.wait_queue)
+                       if r is not None and r.state == "waiting"]
+            req = self.scheduler.admission_order(waiting, self)[0]
             n_ingest = len(req.context) - 1
             n_pages = -(-n_ingest // P) if n_ingest else 0
             remaining = req.max_new - len(req.generated)
@@ -734,7 +826,7 @@ class Engine:
                 # A preempted request whose regenerated context outgrew the
                 # fast tier can never decode again: finish it, don't wedge
                 # the queue head forever.
-                self.wait_queue.popleft()
+                self.wait_queue.remove(req.request_id)
                 self._finish(req, reason="truncated")
                 continue
             # Admit with one page of growth slack (capped at the request's
@@ -749,23 +841,155 @@ class Engine:
                         and self.prefix_cache.reclaim(shortfall)):
                     continue
                 if not self._preempt_one():
-                    return                      # head waits; FIFO order
+                    return              # head waits; order preserved
                 continue
-            self.wait_queue.popleft()
+            self.wait_queue.remove(req.request_id)
+            self.admissions += 1
+            self.admission_wait_steps += self.step_count - req.queued_step
+            self._admit(req)
+
+    def _admit(self, req: Request) -> None:
+        """Move an admitted request out of the wait queue: straight to
+        ``active`` via eager whole-suffix prefill, or — with
+        chunked-prefill interleaving on — into ``prefilling``, where
+        ``_advance_prefills`` ingests budgeted chunks each step."""
+        budget = self.scheduler.step_budget(self)
+        if self.cfg.prefill == "one_shot" and budget.prefill_tokens > 0:
+            self._begin_prefill(req)
+        else:
             self._prefill_request(req)
             req.state = "active"
-            req.last_scheduled = self.step_count
-            self.admissions += 1
+        req.last_scheduled = self.step_count
+
+    def _begin_prefill(self, req: Request) -> None:
+        """Start an interleaved prefill: consult the prefix cache, allocate
+        the WHOLE uncovered suffix's pages now (admission already budgeted
+        them — allocating lazily per chunk could lose the race against
+        later admissions), and park the request in ``prefilling`` state.
+        Trivial ingests (empty / full cache hit) go straight to active."""
+        context = req.context
+        n_ingest = len(context) - 1
+        if n_ingest == 0:
+            req.pos = 0
+            req.state = "active"
+            return
+        P = self.cfg.page_size
+        rid = req.request_id
+        chain = self._match_prefix(req, context, n_ingest)
+        covered = len(chain) * P
+        if n_ingest - covered == 0:
+            req.pos = n_ingest           # full hit: nothing to dispatch
+            req.state = "active"
+            return
+        n_prefix_pages = covered // P
+        n_pages = -(-n_ingest // P) - n_prefix_pages
+        self._ensure_free_hbm(
+            n_pages, needed=[p.page_id
+                             for p in self.pool.request_pages(rid)])
+        for idx in range(n_pages):
+            self.pool.allocate(rid, n_prefix_pages + idx, self.step_count)
+        req.pos = covered
+        req.state = "prefilling"
+        self._pending_chains[rid] = chain
+
+    def _advance_prefills(self) -> None:
+        """Spend this step's prefill token budget across ``prefilling``
+        requests in the policy's prefill order; a request whose prompt
+        completes joins the decode-eligible actives the same step."""
+        prefilling = [r for r in self.requests.values()
+                      if r.state == "prefilling"]
+        if not prefilling:
+            return
+        budget = self.scheduler.step_budget(self).prefill_tokens
+        if budget <= 0:                  # budget turned off mid-flight:
+            budget = float("inf")        # drain rather than wedge forever
+        for req in self.scheduler.prefill_order(prefilling, self):
+            if budget <= 0:
+                break
+            n_ingest = len(req.context) - 1
+            n = int(min(budget, n_ingest - req.pos))
+            self._prefill_chunk(req, n)
+            budget -= n
+            self.scheduler.on_tokens(req, n, self)
+            if req.pos >= n_ingest:
+                chain = self._pending_chains.pop(req.request_id, [])
+                self._insert_prefix(req, req.context, n_ingest, chain)
+                req.state = "active"
+                req.last_scheduled = self.step_count
+
+    def _prefill_chunk(self, req: Request, n: int) -> None:
+        """Ingest ``req.context[req.pos : req.pos+n]`` with one bucketed
+        dispatch at absolute start ``req.pos`` — the same jitted closure as
+        one-shot prefill, so every chunking of a prompt produces
+        bitwise-identical K/V (rows attend by absolute length over the
+        request's full page table)."""
+        context = req.context
+        P = self.cfg.page_size
+        MP = self.cfg.max_pages_per_seq
+        rid = req.request_id
+        start = req.pos
+        my_pages = self.pool.request_pages(rid)
+        # The dispatch's table covers every page, so the whole sequence
+        # must be HBM-resident (earlier chunks' pages may have been evicted
+        # between steps — demand swap-in is a rental like any other).  Same
+        # atomic batched exchange as _prepare_batch: evictions and swap-ins
+        # stage together, so residency succeeds even when both free lists
+        # are empty (an evict-then-swap-in order would need host slots that
+        # a tightly-sized pool does not have).
+        missing = [p.page_id for p in my_pages if p.hbm_slot is None]
+        if missing:
+            shortfall = len(missing) - len(self.pool.free_hbm)
+            victims: List[int] = []
+            if shortfall > 0:
+                exclude = {p.page_id for p in my_pages}
+                cands = [p for p in self.pool.pages.values()
+                         if p.hbm_slot is not None
+                         and p.page_id not in exclude]
+                victims = self.eviction.pick_many(cands, self, shortfall)
+                if len(victims) < shortfall:
+                    raise MemoryError("no evictable page")  # unreachable:
+            self.pool.exchange(victims, missing)      # chunk pages <= usable
+            self._note_swap_in(len(missing))
+            my_pages = self.pool.request_pages(rid)
+        by_index = {p.index_in_seq: p for p in my_pages}
+        S = max(P, 1 << (n - 1).bit_length())
+        tokens = np.zeros((S,), np.int32)
+        tokens[:n] = context[start:start + n]
+        slots = np.full((S,), self.scratch_slot, np.int32)
+        offs = np.zeros((S,), np.int32)
+        written = set()
+        for t in range(n):
+            idx, off = divmod(start + t, P)
+            page = by_index[idx]
+            slots[t] = page.hbm_slot
+            offs[t] = off
+            page.tokens_used = max(page.tokens_used, off + 1)
+            written.add(idx)
+        table = np.full((MP,), -1, np.int32)
+        for p in my_pages:
+            table[p.index_in_seq] = p.hbm_slot
+        nk, nv = self._prefill(
+            self.params, self.pool.k_hbm, self.pool.v_hbm,
+            jnp.asarray(tokens), jnp.asarray(table), jnp.asarray(slots),
+            jnp.asarray(offs), jnp.int32(n), jnp.int32(start))
+        self.pool.k_hbm, self.pool.v_hbm = nk, nv
+        req.pos = start + n
+        for idx in written:
+            if not by_index[idx].shared:
+                by_index[idx].accesses += 1   # chunk's write set
+        self.prefill_dispatches += 1
+        self.prefill_chunks += 1
+        self.prefill_tokens += n
 
     def _preempt_one(self) -> bool:
-        """Drop ALL pages of the least-recently-scheduled paused request
-        (preempt by recompute: resume re-prefills prompt+generated)."""
+        """Drop ALL pages of the policy's chosen paused victim (preempt by
+        recompute: resume re-prefills prompt+generated)."""
         victims = [r for r in self.requests.values()
                    if r.state == "paused"
                    and self.pool.request_pages(r.request_id)]
         if not victims:
             return False
-        victim = min(victims, key=lambda r: r.last_scheduled)
+        victim = self.scheduler.preempt_paused(victims, self)
         self._release_pages(victim.request_id)
         victim.pos = 0
         victim.state = "preempted"
@@ -783,27 +1007,29 @@ class Engine:
     def _reclaim_logical_pages(self):
         """Nothing schedulable while active requests exist — logical pages
         are exhausted.  Reclaim by preempting a paused page-holder first,
-        else the youngest active page-holder (it re-enters the wait queue
-        and recomputes later).  A request that is alone against the whole
-        pool can never grow or finish: truncate it."""
+        else the policy's running victim (active or mid-prefill; it
+        re-enters the wait queue and recomputes later).  A request that is
+        alone against the whole pool can never grow or finish: truncate
+        it."""
         if self.prefix_cache is not None and self.prefix_cache.reclaim(1):
             return
         if self._preempt_one():
             return
-        active = sorted((r for r in self.requests.values()
-                         if r.state == "active"),
-                        key=lambda r: r.last_scheduled)
-        holders = [r for r in active
+        cands = [r for r in self.requests.values()
+                 if r.state in ("active", "prefilling")]
+        holders = [r for r in cands
                    if self.pool.request_pages(r.request_id)]
         if not holders:
             return
-        if len(active) == 1 and holders == active:
-            self._finish(active[0], reason="truncated")
+        if len(cands) == 1 and holders == cands:
+            self._finish(cands[0], reason="truncated")
             return
-        victim = holders[-1]
+        victim = self.scheduler.preempt_active(holders, self)
         self._release_pages(victim.request_id)
         victim.pos = 0
         victim.state = "waiting"
+        victim.queued_step = self.step_count
+        self._pending_chains.pop(victim.request_id, None)
         self.wait_queue.append(victim.request_id)
         self.preemptions += 1
 
@@ -992,17 +1218,20 @@ class Engine:
         return self._run_batch([(req, token)])[0]
 
     def _schedule(self) -> List[Request]:
-        """Pack active requests (oldest-scheduled first) under the HBM-slot
+        """Pack active requests (policy decode order) under the HBM-slot
         and logical-page budgets, so the batch can always be made resident
         without evicting its own members and every allocation can succeed."""
         active = [r for r in self.requests.values() if r.state == "active"]
-        active.sort(key=lambda r: r.last_scheduled)
+        if not active:
+            return []
+        budget = self.scheduler.step_budget(self)
+        row_cap = min(self.cfg.max_batch, max(budget.decode_requests, 0))
         P = self.cfg.page_size
         sched: List[Request] = []
         hbm_budget = self.usable_hbm_pages
         logical_budget = self.free_logical_pages()
-        for r in active:
-            if len(sched) == self.cfg.max_batch:
+        for r in self.scheduler.decode_order(active, self):
+            if len(sched) == row_cap:
                 break
             n_pages = len(self.pool.request_pages(r.request_id))
             need = max(n_pages, r.pos // P + 1)
@@ -1020,9 +1249,12 @@ class Engine:
         return sched
 
     def step(self) -> Dict[int, int]:
-        """One engine step: admit, schedule, decode, bookkeeping."""
+        """One engine step: admit, advance interleaved prefills, schedule,
+        decode, bookkeeping."""
         self.step_count += 1
+        self.scheduler.on_step(self)
         self._admit_waiting()
+        self._advance_prefills()
         sched = self._schedule()
         if not sched and any(r.state == "active"
                              for r in self.requests.values()):
@@ -1039,6 +1271,7 @@ class Engine:
             toks = self._run_batch(pairs)
             for r, t in zip(sched, toks):
                 r.generated.append(int(t))
+                self.scheduler.on_tokens(r, 1, self)
                 out[r.request_id] = int(t)
                 if int(t) in r.params.stop_token_ids:
                     self._finish(r, reason="stop")
@@ -1053,8 +1286,9 @@ class Engine:
     def _finish(self, req: Request, reason: str = "length"):
         """Lifecycle cleanup: free pages, prune the live tables (requests,
         eviction recs, logits), park the result in ``finished`` with its
-        ``finish_reason`` (stop | length | truncated)."""
-        assert reason in ("stop", "length", "truncated"), reason
+        ``finish_reason`` (stop | length | truncated | cancelled)."""
+        assert reason in ("stop", "length", "truncated", "cancelled"), reason
+        self._pending_chains.pop(req.request_id, None)
         self._release_pages(req.request_id)
         req.state = "finished"
         req.finish_reason = reason
@@ -1159,14 +1393,25 @@ class Engine:
             "hbm_pages_used": self.pool.hbm_used(),
             "live_requests": len(self.requests),
             "waiting_requests": len(self.wait_queue),
+            # Queue depth counts LIVE waiting requests (stale queue entries
+            # from cancel/migrate excluded), plus mid-prefill occupancy.
+            "queue_depth": sum(1 for r in self.requests.values()
+                               if r.state == "waiting"),
+            "prefilling_requests": sum(1 for r in self.requests.values()
+                                       if r.state == "prefilling"),
             "finished_requests": len(self.finished),
             "prefill_dispatches": self.prefill_dispatches,
             "prefill_tokens": self.prefill_tokens,
+            "prefill_chunks": self.prefill_chunks,
             "admissions": self.admissions,
+            "admission_wait_steps": self.admission_wait_steps,
+            "mean_admission_wait_steps": (
+                self.admission_wait_steps / max(self.admissions, 1)),
             "preemptions": self.preemptions,
             "starved_steps": self.starved_steps,
             "truncations": self.truncations,
             "finished_stop": self.finish_counts["stop"],
             "finished_length": self.finish_counts["length"],
             "finished_truncated": self.finish_counts["truncated"],
+            "finished_cancelled": self.finish_counts["cancelled"],
         }

@@ -39,6 +39,20 @@ class SamplingParams:
       token is included in the generated stream.
     max_tokens: generation budget; ``None`` defers to the engine caller's
       ``max_new``.  Exhausting it finishes with ``finish_reason="length"``.
+
+    The last three fields are SCHEDULING metadata, not sampling knobs:
+    they never enter the jitted dispatch (streams are bitwise-identical
+    whatever they say — scheduling moves WHEN tokens appear, never WHICH),
+    but they ride inside ``RequestTicket``s so a migrated request keeps
+    its class, tenant, and deadline on the destination replica.
+
+    priority: strict scheduling class for the ``priority`` policy (higher
+      = served sooner); other policies ignore it.
+    tenant: fairness bucket for the ``drr`` policy (deficit-round-robin
+      shares service across tenants, not requests).
+    deadline_steps: optional SLO deadline, in engine steps from enqueue;
+      the ``priority`` policy orders earliest-deadline-first within a
+      class, and the workload replayer scores goodput against it.
     """
 
     temperature: float = 0.0
@@ -47,6 +61,9 @@ class SamplingParams:
     seed: Optional[int] = None
     stop_token_ids: Tuple[int, ...] = ()
     max_tokens: Optional[int] = None
+    priority: int = 0
+    tenant: str = "default"
+    deadline_steps: Optional[int] = None
 
     def __post_init__(self):
         if self.temperature < 0.0:
@@ -57,6 +74,10 @@ class SamplingParams:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
         if self.max_tokens is not None and self.max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {self.max_tokens}")
+        if self.deadline_steps is not None and self.deadline_steps < 1:
+            raise ValueError(
+                f"deadline_steps must be None or >= 1, got "
+                f"{self.deadline_steps}")
         if self.seed is not None and not (0 <= self.seed < 2**31):
             # The seed rides into the jitted dispatch as an int32 row; a
             # silently-wrapped 64-bit seed would collide streams that the

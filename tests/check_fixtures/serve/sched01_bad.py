@@ -1,0 +1,16 @@
+"""SCHED01 bad fixture: unseeded / global-state randomness in a
+serve/-scoped module.
+
+Every draw here either reads OS entropy or mutates process-global RNG
+state, so a replayed trace would generate different arrivals each run."""
+import random
+
+import numpy as np
+
+
+def synthesize_arrivals(n_steps, rate):
+    rng = np.random.default_rng()
+    burst = np.random.poisson(rate)
+    jitter = random.random()
+    coin = random.Random()
+    return rng, burst, jitter, coin.getrandbits(8 * n_steps)

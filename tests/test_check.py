@@ -39,6 +39,7 @@ RULE_CASES = [
     ("FT01", os.path.join("serve", "ft01"), [11, 14, 17]),
     ("KRN01", "krn01", [10, 17, 32]),
     ("KV01", "kv01", [11, 16, 22]),
+    ("SCHED01", os.path.join("serve", "sched01"), [12, 13, 14, 15]),
     ("SPMD01", "spmd01", [10, 19]),
 ]
 
