@@ -123,6 +123,9 @@ def serving_summary(engine) -> Dict[str, Any]:
     if getattr(engine, "prefix_runtime", None) is not None:
         out.update({f"prefix_{k}": v for k, v in
                     guidance_summary(engine.prefix_runtime.events).items()})
+    if getattr(engine, "expert_runtime", None) is not None:
+        out.update({f"expert_{k}": v for k, v in
+                    guidance_summary(engine.expert_runtime.events).items()})
     return out
 
 

@@ -58,6 +58,16 @@ def main():
     p.add_argument("--shared-prefix-len", type=int, default=0,
                    help="give every session this many identical leading "
                         "prompt tokens (a synthetic shared system prompt)")
+    p.add_argument("--offchip-experts", action="store_true",
+                   help="MoE only: keep expert FFN weights host-resident "
+                        "and dispatch through a bounded HBM expert cache "
+                        "under the guided controller")
+    p.add_argument("--expert-cache-size", type=int, default=0,
+                   help="HBM expert-cache capacity in blocks, shared "
+                        "across layers (0 = every block fits)")
+    p.add_argument("--no-expert-double-buffer", action="store_true",
+                   help="disable the double-buffered expert prefetch: "
+                        "every cache miss becomes a blocking demand fetch")
     p.add_argument("--replicas", type=int, default=1,
                    help="engine replicas behind the router (least-loaded "
                         "dispatch; failures/drains migrate in-flight "
@@ -85,7 +95,11 @@ def main():
         policy=args.policy, scheduler=args.scheduler,
         prefill_chunk_tokens=args.prefill_chunk_tokens,
         enable_prefix_cache=args.prefix_cache,
-        min_prefix_pages=args.min_prefix_pages), replicas=args.replicas)
+        min_prefix_pages=args.min_prefix_pages,
+        expert_offchip=args.offchip_experts,
+        expert_cache_size=args.expert_cache_size,
+        expert_double_buffer=not args.no_expert_double_buffer),
+        replicas=args.replicas)
 
     rng = np.random.default_rng(0)
     shared = [int(t) for t in

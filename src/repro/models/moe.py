@@ -159,6 +159,41 @@ def _data_sharded() -> bool:
     return any(int(mesh.shape[a]) > 1 for a in batch_data_axes(mesh))
 
 
+def apply_dropless_flat(gates, experts, x, w_gate, w_up, w_down,
+                        cfg: MoEConfig, expert_slots=None):
+    """Flat dropless dispatch AFTER routing: sort the (B*S*k,) picks into
+    contiguous per-expert ragged segments, run the grouped SwiGLU GEMM,
+    combine gate-weighted in ascending-expert order.
+
+    Factored out of ``_moe_dropless`` so the serving engine's tiered
+    expert path (``serve/expert_store.py``) executes the *exact same op
+    sequence* as the resident path — the bitwise-equality bar for expert
+    tiering rests on this sharing.  ``expert_slots`` is an (E,) int32 map
+    from logical expert id to the weight row holding its block; it rides
+    the grouped GEMM's existing ``group_experts`` remap, so the weight
+    arrays may carry more (or differently ordered) rows than ``cfg`` has
+    experts — a bounded HBM cache.  Expert FFNs are row-independent, so
+    the result is bitwise-identical to the dense layout whenever the
+    referenced rows hold the same bytes.  ``expert_slots=None`` preserves
+    the classic dense layout (row i == expert i) unchanged.
+    """
+    B, S, d = x.shape
+    E = cfg.padded_experts
+    k = cfg.top_k
+    Sk = S * k
+    flat_e = experts.reshape(B * Sk)
+    order, tok_idx = _sort_picks_by_expert(flat_e, k)
+    xs = jnp.take(x.reshape(B * S, d), tok_idx, axis=0)         # (B*Sk, d)
+    group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+    slots = None if expert_slots is None else expert_slots.astype(jnp.int32)
+    ys = ops.moe_grouped_ffn(xs, w_gate, w_up, w_down, group_sizes, slots)
+    gs = gates.reshape(B * Sk)[order]                           # f32
+    y = jnp.zeros((B * S, d), F32).at[tok_idx].add(
+        ys.astype(F32) * gs[:, None])
+    return constrain(y.astype(x.dtype).reshape(B, S, d),
+                     ("batch", "seq", "embed"))
+
+
 def _moe_dropless(p, x, cfg: MoEConfig, per_row: Optional[bool] = None):
     """Sorted ragged dispatch: no capacity, no drops.
 
@@ -192,17 +227,8 @@ def _moe_dropless(p, x, cfg: MoEConfig, per_row: Optional[bool] = None):
         per_row = _data_sharded()
 
     if not per_row:
-        flat_e = experts.reshape(B * Sk)
-        order, tok_idx = _sort_picks_by_expert(flat_e, k)
-        xs = jnp.take(x.reshape(B * S, d), tok_idx, axis=0)     # (B*Sk, d)
-        group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
-        ys = ops.moe_grouped_ffn(xs, p["w_gate"], p["w_up"], p["w_down"],
-                                 group_sizes)
-        gs = gates.reshape(B * Sk)[order]                       # f32
-        y = jnp.zeros((B * S, d), F32).at[tok_idx].add(
-            ys.astype(F32) * gs[:, None])
-        return constrain(y.astype(x.dtype).reshape(B, S, d),
-                         ("batch", "seq", "embed"))
+        return apply_dropless_flat(gates, experts, x, p["w_gate"],
+                                   p["w_up"], p["w_down"], cfg)
 
     experts_r = experts.reshape(B, Sk)
     gates_r = gates.reshape(B, Sk)

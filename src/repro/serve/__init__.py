@@ -7,6 +7,7 @@ from .eviction import (
     make_eviction_policy,
     register_eviction_policy,
 )
+from .expert_store import ExpertBackend, ExpertCacheMissError, ExpertStore
 from .kvcache import Page, PageExport, PagedKVPool
 from .prefix_cache import PrefixBackend, PrefixCache, PrefixNode, block_hash
 from .sampling import SamplingParams
@@ -39,6 +40,9 @@ __all__ = [
     "Engine",
     "EngineReplica",
     "EvictionPolicy",
+    "ExpertBackend",
+    "ExpertCacheMissError",
+    "ExpertStore",
     "FifoPolicy",
     "LLM",
     "Page",

@@ -93,9 +93,10 @@ from ..core.profiler import ArenaProfile, IntervalProfile
 from ..core.runtime import MigrationPlan
 from ..dist.sharding import active_mesh
 from ..models.layers import lm_head, mlp, rmsnorm, rope
-from ..models.moe import moe_decode
+from ..models.moe import apply_dropless_flat, moe_decode, route_tokens
 from ..models.transformer import Model
 from .eviction import make_eviction_policy
+from .expert_store import ExpertBackend, ExpertCacheMissError, ExpertStore
 from .kvcache import PageExport, PagedKVPool
 from .prefix_cache import PrefixBackend, PrefixCache
 from .sampling import DEFAULT_MAX_TOKENS, SamplingParams
@@ -145,6 +146,23 @@ class ServeConfig:
     # ``engine.last_logits`` (a full (B, vocab) transfer per step — keep
     # off on the decode hot path; the parity tests turn it on).
     keep_logits: bool = False
+    # -------- guided expert-weight tiering (serve/expert_store.py) -------
+    # Keep MoE expert FFN weights host-resident and dispatch through a
+    # bounded HBM expert cache.  Decoding runs layer-by-layer (router picks
+    # sync to the host between attention and FFN) and is bitwise-equal to
+    # the resident single-scan path whenever each dispatch's expert working
+    # set fits the cache.
+    expert_offchip: bool = False
+    # HBM cache capacity in expert blocks, shared across layers; 0 means
+    # every (layer, expert) block fits (n_layers * n_experts slots).  Must
+    # hold at least one dispatch's working set:
+    # min(n_experts, max_batch * top_k).
+    expert_cache_size: int = 0
+    # Double-buffered prefetch: while layer L's grouped GEMM is in flight,
+    # the predicted working set for the next layer stages on a second
+    # buffer.  Off = every miss is a blocking demand fetch (same results,
+    # more modeled stall).
+    expert_double_buffer: bool = True
 
 
 @dataclasses.dataclass
@@ -315,6 +333,30 @@ class Engine:
             raise ValueError(
                 f"ServeConfig.prefill_chunk_tokens must be >= 0, got "
                 f"{cfg.prefill_chunk_tokens}")
+        if cfg.expert_offchip:
+            if model.cfg.family != "moe":
+                raise ValueError(
+                    "ServeConfig.expert_offchip requires a MoE model: "
+                    f"family={model.cfg.family!r} has no expert weights "
+                    "to tier")
+            if model.cfg.moe_parallelism == "ep":
+                raise ValueError(
+                    "ServeConfig.expert_offchip drives the flat dropless "
+                    "dispatch; ep parallelism already shards experts "
+                    "across the mesh — pick one placement mechanism")
+            E = model.moe_cfg.padded_experts
+            floor = min(E, cfg.max_batch * model.moe_cfg.top_k)
+            size = cfg.expert_cache_size or model.cfg.n_layers * E
+            if cfg.expert_cache_size < 0 or 0 < size < floor:
+                raise ValueError(
+                    f"ServeConfig.expert_cache_size={cfg.expert_cache_size}"
+                    f" cannot hold one dispatch's expert working set: a "
+                    f"decode batch of max_batch={cfg.max_batch} rows with "
+                    f"top_k={model.moe_cfg.top_k} picks can route up to "
+                    f"min(n_experts={E}, max_batch*top_k)={floor} distinct "
+                    f"experts in one layer; raise expert_cache_size to at "
+                    f"least {floor} (0 = fully resident cache) or lower "
+                    f"max_batch")
         self.model = model
         self.params = params
         self.cfg = cfg
@@ -351,6 +393,33 @@ class Engine:
         if cfg.enable_prefix_cache:
             self.prefix_cache = PrefixCache(
                 self.pool, cfg.page_size, min_pages=cfg.min_prefix_pages)
+        # Guided expert-weight tiering: the ExpertStore exists whenever
+        # expert weights are off-chip (LRU demand management works under
+        # any policy); the third GuidanceRuntime rides only under gdt,
+        # like the KV and prefix controllers.
+        self.expert_store: Optional[ExpertStore] = None
+        self.expert_backend: Optional[ExpertBackend] = None
+        self.expert_runtime: Optional[GuidanceRuntime] = None
+        if cfg.expert_offchip:
+            E = self.model.moe_cfg.padded_experts
+            moe_params = params["layers"]["moe"]
+            # Overlap window for the modeled prefetch clock: the attention
+            # weight bytes each layer reads before the next FFN needs its
+            # experts.
+            attn_bytes = (4 * mc.d_model * model.attn_cfg.n_heads
+                          * model.attn_cfg.head_dim
+                          * moe_params["w_gate"].dtype.itemsize)
+            self.expert_store = ExpertStore(
+                moe_params, mc.n_layers, E,
+                cfg.expert_cache_size or mc.n_layers * E,
+                double_buffer=cfg.expert_double_buffer, hw=hw,
+                window_bytes=attn_bytes)
+            # The dense expert stacks live in the store's tiers now; serve
+            # against a param view holding only the router.  ``params``
+            # itself is untouched (replicas re-derive their own stores).
+            layers = dict(params["layers"])
+            layers["moe"] = {"router": moe_params["router"]}
+            self.params = {**params, "layers": layers}
         self.kv_backend: Optional[PagedKVBackend] = None
         self.runtime: Optional[GuidanceRuntime] = None
         if cfg.policy == "gdt":
@@ -381,9 +450,24 @@ class Engine:
                         num_fragments=cfg.num_fragments,
                         skip_empty_intervals=True),
                     clock=lambda: self.step_count)
+            if self.expert_store is not None:
+                self.expert_backend = ExpertBackend(
+                    self.expert_store, clock=lambda: self.step_count)
+                self.expert_runtime = GuidanceRuntime(
+                    self.expert_backend, hw,
+                    GuidanceConfig(
+                        strategy=cfg.strategy,
+                        fast_capacity_bytes=self.expert_store.cache_bytes,
+                        interval_steps=cfg.interval_steps,
+                        decay=cfg.access_decay,
+                        num_fragments=cfg.num_fragments,
+                        skip_empty_intervals=True),
+                    clock=lambda: self.step_count)
         self._decode_greedy = jax.jit(self._build_decode(with_sampler=False))
         self._decode_sampled = jax.jit(self._build_decode(with_sampler=True))
         self._prefill = jax.jit(self._build_prefill())
+        if self.expert_store is not None:
+            self._build_tiered_closures()
         self.last_logits: Dict[int, np.ndarray] = {}
         # --------------------------------------------------- counters
         self.swap_in_events = 0
@@ -471,8 +555,22 @@ class Engine:
         scratch slot and carry zero residuals — deterministic, never
         garbage.
         """
-        model = self.model
-        acfg = model.attn_cfg
+        x, h2, kp, vp = self._attn_half(
+            lp, x, kp, vp, positions=positions, write_slot=write_slot,
+            write_off=write_off, row_mask=row_mask, lane_mask=lane_mask,
+            rows=rows, unrows=unrows, attend=attend)
+        x = self._ffn_half(lp, x, h2, lane_mask)
+        return x, kp, vp
+
+    def _attn_half(self, lp, x, kp, vp, *, positions, write_slot, write_off,
+                   row_mask, lane_mask, rows, unrows, attend):
+        """Attention through the pre-FFN rmsnorm.  Split from
+        ``_layer_body`` so the tiered expert path (expert_offchip) can run
+        the identical ops up to the router, sync the routing picks to the
+        host, and resume with ``_ffn_half``'s math against cache slots —
+        the split point changes WHERE the jit boundary falls, never which
+        ops run, which is what keeps tiered output bitwise-equal."""
+        acfg = self.model.attn_cfg
         h = rmsnorm(lp["ln1"], x)
         q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
         k1 = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
@@ -490,6 +588,11 @@ class Engine:
                        lp["attn"]["wo"])
         x = x + jnp.where(lane_mask, unrows(y), 0)
         h2 = rmsnorm(lp["ln2"], x)
+        return x, h2, kp, vp
+
+    def _ffn_half(self, lp, x, h2, lane_mask):
+        """FFN + residual, the second half of ``_layer_body``."""
+        model = self.model
         if model.cfg.family == "moe":
             # Same dropless routing + grouped GEMM as model.prefill, so a
             # token's expert assignment never depends on how the stream is
@@ -497,8 +600,7 @@ class Engine:
             d = moe_decode(lp["moe"], h2, model.moe_cfg)
         else:
             d = mlp(lp["mlp"], h2)
-        x = x + jnp.where(lane_mask, d, 0)
-        return x, kp, vp
+        return x + jnp.where(lane_mask, d, 0)
 
     # ========================================================= jit decode
     def _build_decode(self, with_sampler: bool):
@@ -596,6 +698,244 @@ class Engine:
             return nk, nv
 
         return prefill
+
+    # ==================================================== tiered expert path
+    def _build_tiered_closures(self):
+        """Jitted pieces of the layer-by-layer pipeline that serves MoE
+        FFN weights out of the bounded HBM expert cache
+        (``ServeConfig.expert_offchip``).
+
+        The resident path runs one jitted scan over all layers; the tiered
+        path cannot (each layer's routed expert set must reach the host so
+        the store can ensure residency before the grouped GEMM), so the
+        SAME layer ops are recomposed as: per-layer jitted
+        attention+router (``_attn_half`` + ``route_tokens``), a host sync
+        of the picks, then a jitted FFN-from-cache + residual
+        (``apply_dropless_flat`` with the slot map as ``group_experts``).
+        Every op and its order is identical to the resident scan — only
+        the jit boundaries move — which is the invariant the bitwise
+        parity tests pin.  While one layer's FFN dispatch is in flight the
+        store stages the next layer's predicted experts (double buffer).
+        """
+        model = self.model
+        acfg = model.attn_cfg
+        mcfg = model.moe_cfg
+        from ..kernels.ops import paged_attention, paged_prefill, sample_tokens
+
+        def slice_layer(tree, l):
+            return jax.tree_util.tree_map(
+                lambda a: jax.lax.dynamic_index_in_dim(
+                    a, l, 0, keepdims=False), tree)
+
+        def embed(params, tokens):
+            return jnp.take(params["embed"]["tok"], tokens, axis=0)
+
+        def decode_attn(params, k_pool, v_pool, x, l, page_table, lengths,
+                        write_slot, write_off, active):
+            lp = slice_layer(params["layers"], l)
+            kp = jax.lax.dynamic_index_in_dim(k_pool, l, 0, keepdims=False)
+            vp = jax.lax.dynamic_index_in_dim(v_pool, l, 0, keepdims=False)
+            x, h2, kp, vp = self._attn_half(
+                lp, x, kp, vp, positions=(lengths - 1)[:, None],
+                write_slot=write_slot, write_off=write_off,
+                row_mask=active, lane_mask=active[:, None, None],
+                rows=lambda t: t[:, 0], unrows=lambda y: y[:, None],
+                attend=lambda q, kp, vp: paged_attention(
+                    q, kp, vp, page_table, lengths, window=acfg.window))
+            B, S, d = h2.shape
+            gates, experts = route_tokens(
+                lp["moe"]["router"], h2.reshape(B * S, d), mcfg)
+            k_pool = jax.lax.dynamic_update_index_in_dim(k_pool, kp, l, 0)
+            v_pool = jax.lax.dynamic_update_index_in_dim(v_pool, vp, l, 0)
+            return x, h2, gates, experts, k_pool, v_pool
+
+        def prefill_prologue(params, tokens, n_real, start):
+            S = tokens.shape[0]
+            local = jnp.arange(S, dtype=jnp.int32)
+            positions = start + local
+            valid = local < n_real
+            lengths = jnp.where(valid, positions + 1, 0)
+            x = jnp.take(params["embed"]["tok"], tokens[None], axis=0)
+            return x, positions, lengths, valid
+
+        def prefill_attn(params, k_pool, v_pool, x, l, page_table, slots,
+                         offs, positions, lengths, valid):
+            lp = slice_layer(params["layers"], l)
+            kp = jax.lax.dynamic_index_in_dim(k_pool, l, 0, keepdims=False)
+            vp = jax.lax.dynamic_index_in_dim(v_pool, l, 0, keepdims=False)
+            x, h2, kp, vp = self._attn_half(
+                lp, x, kp, vp, positions=positions[None],
+                write_slot=slots, write_off=offs,
+                row_mask=valid, lane_mask=valid[None, :, None],
+                rows=lambda t: t[0], unrows=lambda y: y[None],
+                attend=lambda q, kp, vp: paged_prefill(
+                    q, kp, vp, page_table, lengths, window=acfg.window))
+            B, S, d = h2.shape
+            gates, experts = route_tokens(
+                lp["moe"]["router"], h2.reshape(B * S, d), mcfg)
+            k_pool = jax.lax.dynamic_update_index_in_dim(k_pool, kp, l, 0)
+            v_pool = jax.lax.dynamic_update_index_in_dim(v_pool, vp, l, 0)
+            return x, h2, gates, experts, k_pool, v_pool
+
+        def ffn(x, h2, wg, wu, wd, slot_map, gates, experts, lane_mask):
+            d = apply_dropless_flat(gates, experts, h2, wg, wu, wd, mcfg,
+                                    expert_slots=slot_map)
+            return x + jnp.where(lane_mask, d, 0)
+
+        def spec_route(params, x, nl):
+            # Speculative gating: layer ``nl``'s own pre-FFN norm + router
+            # applied to the residual stream as it leaves layer nl-1 —
+            # i.e. one attention delta early.  The residual stream
+            # dominates the router input, so these probabilities forecast
+            # the next dispatch's working set; the store stages the top of
+            # the ranking while this layer's grouped GEMM is in flight.
+            # Full (T, E) probs, not top-k picks: borderline tokens flip
+            # their picks under the missing attention delta, but the mass
+            # ranking is stabler than any single pick.  Predictions never
+            # touch results — a miss means a blocking demand fetch.
+            lp = slice_layer(params["layers"], nl)
+            h2 = rmsnorm(lp["ln2"], x)
+            B, S, d = h2.shape
+            logits = jnp.einsum("td,de->te",
+                                h2.reshape(B * S, d).astype(jnp.float32),
+                                lp["moe"]["router"])
+            return jax.nn.softmax(logits, axis=-1)
+
+        def make_tail(with_sampler):
+            def tail(params, x, lengths, active, seeds, temperature, top_k,
+                     top_p):
+                x = rmsnorm(params["final_ln"], x)
+                logits = lm_head(params["head"], x)[:, 0]
+                logits = jnp.where(active[:, None], logits, 0.0)
+                if with_sampler:
+                    next_tokens = sample_tokens(logits, seeds, lengths,
+                                                temperature, top_k, top_p)
+                else:
+                    next_tokens = jnp.argmax(logits, axis=-1).astype(
+                        jnp.int32)
+                return logits, next_tokens
+            return tail
+
+        self._t_embed = jax.jit(embed)
+        self._t_spec_route = jax.jit(spec_route)
+        self._t_decode_attn = jax.jit(decode_attn)
+        self._t_prefill_prologue = jax.jit(prefill_prologue)
+        self._t_prefill_attn = jax.jit(prefill_attn)
+        self._t_ffn = jax.jit(ffn)
+        self._t_tail_greedy = jax.jit(make_tail(False))
+        self._t_tail_sampled = jax.jit(make_tail(True))
+
+    def _tiered_ffn(self, l, x, h2, gates, experts, lane_mask, token_mask,
+                    wrap_prefetch=True):
+        """Host half of one tiered layer: sync the routed picks, make them
+        resident (commit the in-flight prefetch / demand-fetch misses /
+        LRU-evict), dispatch the FFN against cache slots, then put the
+        NEXT layer's predicted experts in flight while this FFN runs.
+
+        ``token_mask`` (host bool, one per routed token) excludes padded
+        prefill rows and inactive batch rows from the residency working
+        set: their FFN outputs are zeroed by ``lane_mask`` in BOTH paths
+        and the dropless dispatch is per-row independent, so their picks
+        may legally hit absent experts (slot −1) without affecting any
+        live row's bits — and must not inflate the cache requirement or
+        the access profile."""
+        store = self.expert_store
+        E = self.model.moe_cfg.padded_experts
+        counts = np.bincount(
+            np.asarray(experts).reshape(len(token_mask), -1)
+            [token_mask].reshape(-1), minlength=E)
+        slot_map = store.dispatch(l, counts, self.step_count)
+        nb = store.take_rental_bytes()
+        if nb and self.expert_runtime is not None:
+            self.expert_runtime.record_rental(nb, source="expert_miss")
+        x = self._t_ffn(x, h2, store.w_gate_cache, store.w_up_cache,
+                        store.w_down_cache, jnp.asarray(slot_map), gates,
+                        experts, lane_mask)
+        # Double buffer: stage the next dispatch's predicted working set
+        # while this one's grouped GEMM is in flight.  Within a step the
+        # prediction is speculative gating — the next layer's router run
+        # on the residual stream one attention delta early; at the
+        # wrap-around the next step's first dispatch routes a token that
+        # does not exist yet, so the store falls back to recency + the
+        # guidance profile.
+        nl = (l + 1) % self.model.cfg.n_layers
+        if nl:
+            self._spec_prefetch(nl, x, token_mask)
+        elif wrap_prefetch:
+            store.prefetch(0, self.step_count)
+        return x
+
+    def _spec_prefetch(self, l, x, token_mask):
+        """Forecast layer ``l``'s routed experts from the residual stream
+        ``x`` (speculative gating) and put the likeliest non-resident ones
+        in flight.  Live rows only — masked rows route garbage by design
+        (see ``_tiered_ffn``).  The forecast covers the rows' top-k picks
+        plus a small margin of next-likeliest experts by router mass: the
+        margin costs overlapped (hidden) bytes and buys back the picks
+        the missing attention delta flips."""
+        mcfg = self.model.moe_cfg
+        live = int(np.sum(token_mask))
+        if not live:
+            return
+        probs = np.asarray(self._t_spec_route(self.params, x, jnp.int32(l)))
+        mass = probs[np.asarray(token_mask)].sum(axis=0)
+        order = np.argsort(-mass, kind="stable")
+        cap = min(mcfg.padded_experts, live * mcfg.top_k + 2)
+        self.expert_store.prefetch(
+            l, self.step_count, predicted=[int(e) for e in order[:cap]])
+
+    def _tiered_decode(self, tokens, page_table, lengths, write_slot,
+                       write_off, active, seeds, temperature, top_k, top_p,
+                       use_sampler):
+        x = self._t_embed(self.params, tokens)
+        kq, vq = self.pool.k_hbm, self.pool.v_hbm
+        lane = active[:, None, None]
+        mask = np.asarray(active)
+        for l in range(self.model.cfg.n_layers):
+            x, h2, gates, experts, kq, vq = self._t_decode_attn(
+                self.params, kq, vq, x, jnp.int32(l), page_table, lengths,
+                write_slot, write_off, active)
+            x = self._tiered_ffn(l, x, h2, gates, experts, lane, mask,
+                                 wrap_prefetch=False)
+        tail = self._t_tail_sampled if use_sampler else self._t_tail_greedy
+        logits, next_tokens = tail(self.params, x, lengths, active, seeds,
+                                   temperature, top_k, top_p)
+        # The sampled token IS the next step's layer-0 residual stream
+        # (x = embed(token)), so the one dispatch the in-step speculation
+        # cannot see — the wrap-around to the next step's first layer —
+        # gets its own forecast here, hiding the fetch under the tail +
+        # host scheduling gap.  Batch rotation between steps makes this a
+        # forecast, not an oracle; mispredictions demand-fetch as usual.
+        if self.expert_store.double_buffer:
+            self._spec_prefetch(
+                0, self._t_embed(self.params, next_tokens[:, None]), mask)
+        return logits, next_tokens, kq, vq
+
+    def _tiered_prefill(self, tokens, page_table, slots, offs, n_real,
+                        start):
+        x, positions, lengths, valid = self._t_prefill_prologue(
+            self.params, tokens, n_real, start)
+        kq, vq = self.pool.k_hbm, self.pool.v_hbm
+        lane = valid[None, :, None]
+        mask = np.asarray(valid)
+        for l in range(self.model.cfg.n_layers):
+            x, h2, gates, experts, kq, vq = self._t_prefill_attn(
+                self.params, kq, vq, x, jnp.int32(l), page_table, slots,
+                offs, positions, lengths, valid)
+            x = self._tiered_ffn(l, x, h2, gates, experts, lane, mask)
+        return kq, vq
+
+    def _run_prefill(self, tokens, page_table, slots, offs, n_real, start):
+        """One bucketed prefill dispatch: the resident single-jit scan, or
+        the layer-by-layer tiered pipeline when expert weights are
+        off-chip.  Both return the updated (nk, nv) pools."""
+        args = (jnp.asarray(tokens), jnp.asarray(page_table),
+                jnp.asarray(slots), jnp.asarray(offs), jnp.int32(n_real),
+                jnp.int32(start))
+        if self.expert_store is not None:
+            return self._tiered_prefill(*args)
+        return self._prefill(self.params, self.pool.k_hbm, self.pool.v_hbm,
+                             *args)
 
     # ========================================================== requests
     def add_request(self, request_id: int, prompt: List[int],
@@ -968,10 +1308,7 @@ class Engine:
         table = np.full((MP,), -1, np.int32)
         for p in my_pages:
             table[p.index_in_seq] = p.hbm_slot
-        nk, nv = self._prefill(
-            self.params, self.pool.k_hbm, self.pool.v_hbm,
-            jnp.asarray(tokens), jnp.asarray(table), jnp.asarray(slots),
-            jnp.asarray(offs), jnp.int32(n), jnp.int32(start))
+        nk, nv = self._run_prefill(tokens, table, slots, offs, n, start)
         self.pool.k_hbm, self.pool.v_hbm = nk, nv
         req.pos = start + n
         for idx in written:
@@ -1129,10 +1466,8 @@ class Engine:
         table = np.full((MP,), -1, np.int32)
         for p in self.pool.request_pages(rid):
             table[p.index_in_seq] = p.hbm_slot
-        nk, nv = self._prefill(
-            self.params, self.pool.k_hbm, self.pool.v_hbm,
-            jnp.asarray(tokens), jnp.asarray(table), jnp.asarray(slots),
-            jnp.asarray(offs), jnp.int32(n_suffix), jnp.int32(covered))
+        nk, nv = self._run_prefill(tokens, table, slots, offs, n_suffix,
+                                   covered)
         self.pool.k_hbm, self.pool.v_hbm = nk, nv
         req.pos = n_ingest
         for i, p in enumerate(pages):
@@ -1277,11 +1612,19 @@ class Engine:
                     self._finish(r, reason="stop")
                 elif len(r.generated) >= r.max_new:
                     self._finish(r, reason="length")
-        if self.runtime is not None:
-            self.runtime.on_step()        # MaybeMigrate at the interval
-        if self.prefix_runtime is not None:
-            self.prefix_runtime.on_step()  # shared prefixes: same loop
+        self._tick_controllers()
         return out
+
+    def _tick_controllers(self) -> None:
+        """MaybeMigrate for every guidance controller, in a FIXED order:
+        KV pages -> shared prefixes -> expert weights.  The order is part
+        of the engine's replay contract — each controller's event stream
+        is pinned by regression tests, and a reorder would change which
+        controller sees the interval's free HBM first.  Add new
+        controllers at the END of this list."""
+        for rt in (self.runtime, self.prefix_runtime, self.expert_runtime):
+            if rt is not None:
+                rt.on_step()
 
     def _finish(self, req: Request, reason: str = "length"):
         """Lifecycle cleanup: free pages, prune the live tables (requests,
@@ -1351,15 +1694,19 @@ class Engine:
         # Greedy-only batches (the default) take the argmax-epilogue
         # variant: no sort/cumsum/Gumbel work on the hot path, and the
         # sampled variant is never even compiled unless someone samples.
-        decode = (self._decode_greedy
-                  if all(req.params.greedy for req, _ in pairs)
-                  else self._decode_sampled)
-        logits, toks, nk, nv = decode(
-            self.params, self.pool.k_hbm, self.pool.v_hbm,
-            jnp.asarray(tokens), jnp.asarray(table), jnp.asarray(lengths),
-            jnp.asarray(wslot), jnp.asarray(woff), jnp.asarray(active),
-            jnp.asarray(seeds), jnp.asarray(temperature),
-            jnp.asarray(top_k), jnp.asarray(top_p))
+        greedy = all(req.params.greedy for req, _ in pairs)
+        args = (jnp.asarray(tokens), jnp.asarray(table),
+                jnp.asarray(lengths), jnp.asarray(wslot), jnp.asarray(woff),
+                jnp.asarray(active), jnp.asarray(seeds),
+                jnp.asarray(temperature), jnp.asarray(top_k),
+                jnp.asarray(top_p))
+        if self.expert_store is not None:
+            logits, toks, nk, nv = self._tiered_decode(
+                *args, use_sampler=not greedy)
+        else:
+            decode = self._decode_greedy if greedy else self._decode_sampled
+            logits, toks, nk, nv = decode(
+                self.params, self.pool.k_hbm, self.pool.v_hbm, *args)
         self.pool.k_hbm, self.pool.v_hbm = nk, nv
         if self.cfg.keep_logits:
             logits_np = np.asarray(logits)
@@ -1380,8 +1727,22 @@ class Engine:
             "prefix_inserted_pages": pc.inserted_pages,
             "prefix_evicted_pages": pc.evicted_pages,
         } if pc is not None else {}
+        es = self.expert_store
+        expert = {
+            "expert_cache_slots": es.cache_slots,
+            "expert_resident_blocks": sum(
+                1 for b in es.blocks.values() if b.slot is not None),
+            "expert_demand_fetches": es.demand_fetches,
+            "expert_prefetch_fetches": es.prefetch_fetches,
+            "expert_prefetch_hits": es.prefetch_hits,
+            "expert_dropped_prefetches": es.dropped_prefetches,
+            "expert_evictions": es.evictions,
+            "expert_bytes_fetched": es.bytes_fetched,
+            "expert_transfer_events": es.transfer_events,
+        } if es is not None else {}
         return {
             **prefix,
+            **expert,
             "saved_prefill_tokens": self.saved_prefill_tokens,
             "steps": self.step_count,
             "swap_ins": self.pool.swaps_in,

@@ -240,10 +240,73 @@ def make_paged_harness():
     return Harness("paged", backend, runtime, touch, reference)
 
 
+def make_expert_harness():
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import ExpertBackend, ExpertStore
+
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    moe_params = {
+        "w_gate": jax.random.normal(ks[0], (2, 4, 4, 4), jnp.float32),
+        "w_up": jax.random.normal(ks[1], (2, 4, 4, 4), jnp.float32),
+        "w_down": jax.random.normal(ks[2], (2, 4, 4, 4), jnp.float32),
+    }
+    store = ExpertStore(moe_params, 2, 4, 2, double_buffer=False)
+    clock = {"step": 0}
+    backend = ExpertBackend(store, clock=lambda: clock["step"])
+    cap = store.cache_bytes
+    runtime = GuidanceRuntime(
+        backend, CLX, GuidanceConfig(strategy="thermos",
+                                     fast_capacity_bytes=cap,
+                                     interval_steps=1, num_fragments=4,
+                                     skip_empty_intervals=True),
+        clock=lambda: clock["step"])
+
+    def touch(i):
+        # Phase shift: layer 0's experts dominate the routed-token counts
+        # early, then layer 1 becomes the hot population and its blocks
+        # must be promoted over layer 0's.
+        clock["step"] = i + 1
+        hot = 0 if i < 3 else 1
+        for e in range(store.n_experts):
+            store.blocks[(hot, e)].accesses += 200.0 + 50.0 * e
+            store.blocks[(1 - hot, e)].accesses += 1.0
+
+    def reference():
+        # Transliteration of ExpertBackend.snapshot + the engine interval
+        # loop (pure read): layer arenas, per-block chunk telemetry.
+        from repro.core import ChunkStats
+        step = clock["step"]
+        bb = store.block_bytes
+        rows, telem = [], {}
+        for l in range(store.n_layers):
+            blocks = [store.blocks[(l, e)] for e in range(store.n_experts)]
+            fast = sum(1 for b in blocks if b.slot is not None)
+            rows.append(ArenaProfile(
+                arena_id=l, site_id=l, label=f"moe_l{l}",
+                accesses=sum(b.accesses for b in blocks),
+                resident_bytes=len(blocks) * bb,
+                fast_fraction=fast / len(blocks)))
+            telem[l] = [
+                ChunkStats(chunk_id=store.chunk_id(l, b.expert), nbytes=bb,
+                           accesses=b.accesses, age=step - b.birth_step,
+                           fast=b.slot is not None)
+                for b in blocks]
+        profile = IntervalProfile(step, rows, 0, 0.0)
+        exploded, frags = explode_profile(profile, telem, num_fragments=4)
+        recs = recommend(exploded, cap, "thermos")
+        decision = decide(exploded, recs, CLX)
+        placement = collapse_to_chunks(frags, recs.fractions)
+        return decision, None, placement
+
+    return Harness("expert", backend, runtime, touch, reference)
+
+
 HARNESSES = {
     "arena": make_arena_harness,
     "sim": make_sim_harness,
     "paged": make_paged_harness,
+    "expert": make_expert_harness,
 }
 
 

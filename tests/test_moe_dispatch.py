@@ -364,3 +364,54 @@ def test_group_metadata_covers_every_row_once(seed):
         hi = min(offs[g + 1], (mt + 1) * bt)
         covered[lo:hi] = True
     assert covered.all()
+
+
+# ===================================== cache-slot indirection (expert tiers)
+def test_apply_dropless_flat_slot_layouts_bitwise_equal():
+    """``apply_dropless_flat`` with ``expert_slots`` rides the grouped
+    GEMM's ``group_experts`` remap: dense weights with no slot map, the
+    identity map over dense weights, and a permuted bounded cache holding
+    the routed experts must all produce the BITWISE-identical output —
+    the invariant the serving expert cache's parity rests on."""
+    from repro.models.moe import apply_dropless_flat
+
+    cfg = make_cfg(top_k=2, parallelism="tp")
+    p = f32_params(cfg)
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(2, 6, cfg.d_model)), F32)
+    gates, experts = route_tokens(
+        p["router"], x.reshape(12, cfg.d_model), cfg)
+    gates = gates.reshape(2, 6, cfg.top_k)
+    experts = experts.reshape(2, 6, cfg.top_k)
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    E = cfg.n_experts
+
+    dense = apply_dropless_flat(gates, experts, x, wg, wu, wd, cfg)
+    ident = apply_dropless_flat(gates, experts, x, wg, wu, wd, cfg,
+                                expert_slots=jnp.arange(E, dtype=jnp.int32))
+    assert np.array_equal(np.asarray(dense), np.asarray(ident))
+
+    # Bounded cache: a permutation of the routed experts into cache rows,
+    # unrouted experts absent (slot -1), plus a junk row whose weights
+    # must never be *selected*.  Junk stays FINITE: the dispatch's one-hot
+    # select zeroes unselected rows with an exact 0-multiply, which is
+    # bitwise-safe for any finite value — that is why the serving cache
+    # zero-initializes its slots and demotes metadata-only.  A wrongly
+    # selected junk row would swing the output by ~1e7 and fail loudly.
+    routed = sorted({int(e) for e in np.asarray(experts).reshape(-1)})
+    perm = list(reversed(range(len(routed))))
+    slots = np.full(E, -1, dtype=np.int32)
+    C = len(routed) + 1
+    cache_g = np.full((C,) + wg.shape[1:], 3.14e7, np.float32)
+    cache_u = np.full((C,) + wu.shape[1:], 3.14e7, np.float32)
+    cache_d = np.full((C,) + wd.shape[1:], 3.14e7, np.float32)
+    for e, s in zip(routed, perm):
+        slots[e] = s
+        cache_g[s] = np.asarray(wg)[e]
+        cache_u[s] = np.asarray(wu)[e]
+        cache_d[s] = np.asarray(wd)[e]
+    cached = apply_dropless_flat(
+        gates, experts, x, jnp.asarray(cache_g), jnp.asarray(cache_u),
+        jnp.asarray(cache_d), cfg, expert_slots=jnp.asarray(slots))
+    assert np.array_equal(np.asarray(dense), np.asarray(cached)), \
+        "cache-slot indirection must be bitwise-invisible"

@@ -259,3 +259,33 @@ def test_gdt_policy_beats_fifo_on_sessions(model_and_params):
     # Guided placement keeps hot sessions' pages resident -> fewer swap-ins.
     assert s_gdt["swap_ins"] <= s_fifo["swap_ins"]
     assert s_gdt["bytes_moved"] <= s_fifo["bytes_moved"]
+
+
+def test_controller_tick_order_is_pinned(moe_model_and_params):
+    """``_tick_controllers`` runs every guidance controller once per step
+    in a FIXED order — KV pages, shared prefixes, expert weights.  The
+    order is part of the replay contract (it decides which controller
+    sees the interval's free HBM first), so a reorder must fail here."""
+    model, params = moe_model_and_params
+    eng = Engine(model, params, ServeConfig(
+        max_batch=2, page_size=4, hbm_pages=24, host_pages=64,
+        policy="gdt", interval_steps=4, enable_prefix_cache=True,
+        expert_offchip=True, expert_cache_size=8))
+    ticked = []
+    for name, rt in (("paged_kv", eng.runtime),
+                     ("prefix", eng.prefix_runtime),
+                     ("expert", eng.expert_runtime)):
+        assert rt is not None, f"{name} controller must exist in this cfg"
+
+        def record(orig=rt.on_step, name=name):
+            ticked.append(name)
+            return orig()
+
+        rt.on_step = record
+    eng.add_request(0, [3, 1, 4, 1, 5, 9], max_new=6)
+    n_steps = 0
+    while eng.requests:
+        eng.step()
+        n_steps += 1
+    assert n_steps >= 3
+    assert ticked == ["paged_kv", "prefix", "expert"] * n_steps
